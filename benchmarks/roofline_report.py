@@ -1,0 +1,73 @@
+"""§Roofline report: renders the per-(arch x shape x mesh) roofline table from
+the dry-run artifacts (artifacts/dryrun/*.json) — compute / memory /
+collective terms, dominant bottleneck, MODEL_FLOPS / HLO_FLOPs ratio, and a
+one-line "what would move the dominant term" note.
+"""
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+NOTES = {
+    ("compute",): "more chips / lower precision / fewer remat recomputes",
+    ("memory",): "fuse reads, shrink resident KV (larger pages / lower "
+                 "budget), bf16 everywhere, avoid pool rewrites",
+    ("collective",): "reshard to cut all-gathers (head- vs seq-parallel), "
+                     "overlap collectives with compute, shard-local recall",
+}
+
+
+def load(mesh="single"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "error": r.get("error", "?")})
+            continue
+        ro, mem = r["roofline"], r["memory"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": ro["compute_s"], "memory_s": ro["memory_s"],
+            "collective_s": ro["collective_s"], "dominant": ro["dominant"],
+            "useful": ro["useful_flops_ratio"],
+            "mem_gb": mem["per_device_total"] / 1e9,
+            "fits": mem["fits_16GB"],
+        })
+    return rows
+
+
+def render_markdown(mesh="single"):
+    rows = load(mesh)
+    out = [f"| arch | shape | compute (s) | memory (s) | collective (s) | "
+           f"dominant | useful FLOPs | GB/dev | fits |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR {r['error'][:40]} |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"{r['dominant']} | {r['useful']:.3f} | {r['mem_gb']:.2f} | "
+            f"{'y' if r['fits'] else 'N'} |")
+    return "\n".join(out)
+
+
+def main():
+    for mesh in ("single", "multi"):
+        rows = load(mesh)
+        if not rows:
+            continue
+        ok = [r for r in rows if "error" not in r]
+        print(f"roofline/{mesh},{len(ok)},of={len(rows)}")
+        for r in ok:
+            print(f"roofline/{mesh}/{r['arch']}/{r['shape']},"
+                  f"{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e6:.1f},"
+                  f"dominant={r['dominant']};useful={r['useful']:.3f};"
+                  f"mem={r['mem_gb']:.2f}GB")
+
+
+if __name__ == "__main__":
+    main()

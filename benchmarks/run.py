@@ -1,0 +1,66 @@
+"""Benchmark driver: one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  accuracy            Tables 2/3 proxy (attention fidelity + page overlap)
+  breakdown           Fig. 1 right (latency decomposition cost model)
+  e2e                 Fig. 7 (end-to-end latency, speedup vs ArkVale)
+  ablation            Fig. 9 (HL / DB / SR cumulative)
+  measured            real-engine CPU wall-clock per decode step
+  similarity          Fig. 3 / Table 8 (adjacent-step query cosine)
+  correction          Table 9 (correction rate vs tau/drift)
+  selection_ablation  App. B.2 (MaxQ..MeanS) + B.3 (tau sweep)
+  roofline            Roofline table from dry-run artifacts
+
+Run separately (needs its own process: forces 8 XLA host devices):
+  PYTHONPATH=src python benchmarks/sharded_quality.py   # opt2 accuracy cost
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SECTIONS = ("accuracy", "breakdown", "e2e", "ablation", "measured",
+            "similarity", "correction", "selection_ablation", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help=f"subset of {SECTIONS}")
+    args, _ = ap.parse_known_args()
+    todo = set(args.only) if args.only else set(SECTIONS)
+    print("name,us_per_call,derived")
+
+    if "accuracy" in todo:
+        import retrieval_accuracy
+        retrieval_accuracy.run()
+    if todo & {"breakdown", "e2e", "ablation", "measured"}:
+        import latency
+        if "breakdown" in todo:
+            latency.breakdown("llama31-8b")
+            latency.breakdown("qwen25-7b")
+        if "e2e" in todo:
+            latency.e2e("llama31-8b")
+        if "ablation" in todo:
+            latency.ablation("llama31-8b")
+        if "measured" in todo:
+            latency.measured()
+    if todo & {"similarity", "correction"}:
+        import similarity_correction
+        if "similarity" in todo:
+            similarity_correction.model_query_similarity()
+        if "correction" in todo:
+            similarity_correction.correction_rates()
+    if "selection_ablation" in todo:
+        import selection_ablation
+        selection_ablation.run()
+        selection_ablation.tau_sweep()
+    if "roofline" in todo:
+        import roofline_report
+        roofline_report.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""App. B.2/B.3 ablations: group-consistent selection variants (MaxQ, MeanQ,
+MaxQK, MeanQK, MaxS, MeanS) + correction thresholds, scored by oracle-page
+overlap and attention-output error on the structured process."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _common import attention_process, csv_row
+from repro.configs import get_config
+from repro.configs.base import FreeKVConfig
+from repro.core import selection
+from repro.core.retrieval import make_retriever
+
+VARIANTS = {
+    "MaxQ": dict(group_pool="max_qk", q_pool="max"),
+    "MeanQ": dict(group_pool="max_qk", q_pool="mean"),
+    "MaxQK": dict(group_pool="max_qk", q_pool=None),
+    "MeanQK": dict(group_pool="mean_qk", q_pool=None),
+    "MaxS": dict(group_pool="max_softmax", q_pool=None),
+    "MeanS": dict(group_pool="mean_softmax", q_pool=None),   # paper's choice
+}
+
+
+def run(arch="granite-3-8b-smoke", B=4, T=512, n_queries=32, quiet=False):
+    cfg = get_config(arch)
+    p = 16
+    key = jax.random.PRNGKey(2)
+    k, v, query_walk = attention_process(key, cfg, B, T)
+    qs = query_walk(n_queries)
+    length = jnp.full((B,), T, jnp.int32)
+    n_pages = T // p
+    kp = k.reshape(B, n_pages, p, cfg.n_kv_heads, cfg.d_head)
+    summ = jnp.stack([kp.min(2), kp.max(2)], axis=3)
+    n_sel = 8
+    results = {}
+    for name, kw in VARIANTS.items():
+        fkv = FreeKVConfig(method="freekv", page_size=p, budget=10 ** 6,
+                           n_sink=p, n_window=p, group_pool=kw["group_pool"])
+        hits = []
+        for i in range(n_queries):
+            idx, _ = selection.select_pages(cfg, fkv, qs[:, i], summ, length,
+                                            n_sel, q_pool=kw["q_pool"])
+            oracle = selection.oracle_pages(cfg, fkv, qs[:, i], k, length,
+                                            n_sel)
+            ai, bi = np.asarray(idx), np.asarray(oracle)
+            hit = 0.0
+            for b in range(B):
+                for h in range(cfg.n_kv_heads):
+                    sa = set(ai[b, h][ai[b, h] >= 0].tolist())
+                    sb = set(bi[b, h][bi[b, h] >= 0].tolist())
+                    hit += len(sa & sb) / max(len(sb), 1)
+            hits.append(hit / (B * cfg.n_kv_heads))
+        results[name] = float(np.mean(hits))
+        if not quiet:
+            csv_row(f"selection_ablation/{name}", 0.0,
+                    f"oracle_overlap={results[name]:.3f}")
+    return results
+
+
+def tau_sweep(arch="granite-3-8b-smoke", B=4, T=512, steps=40, quiet=False):
+    """Correction threshold sweep (App. B.3 Table 7 analogue): output error
+    vs full cache as a function of tau (tau=0: pure speculation; tau=1:
+    always re-select)."""
+    cfg = get_config(arch)
+    p = 16
+    key = jax.random.PRNGKey(3)
+    k, v, query_walk = attention_process(key, cfg, B, T, drift=0.15)
+    qs = query_walk(steps)
+    rf = make_retriever(cfg, FreeKVConfig(method="full"))
+    out = {}
+    for tau in (0.0, 0.7, 0.8, 0.9, 1.0):
+        fkv = FreeKVConfig(method="freekv", page_size=p, budget=128,
+                           n_sink=32, n_window=32, tau=tau)
+        r = make_retriever(cfg, fkv)
+        st = r.init_state(B, T + steps + p, jnp.float32)
+        st = r.prefill(st, k, v, qs[:, 0])
+        stf = rf.init_state(B, T + steps + p, jnp.float32)
+        stf = rf.prefill(stf, k, v, qs[:, 0])
+        errs, rates = [], []
+        for i in range(1, steps):
+            q = qs[:, i]
+            kn, vn = k[:, i % T], v[:, i % T]
+            o, st, info = r.decode(st, q, kn, vn)
+            of, stf, _ = rf.decode(stf, q, kn, vn)
+            err = (jnp.linalg.norm(o - of, axis=-1)
+                   / jnp.maximum(jnp.linalg.norm(of, axis=-1), 1e-6))
+            errs.append(float(err.mean()))
+            rates.append(float(np.asarray(info["corrected"]).mean()))
+        out[tau] = (float(np.mean(errs)), float(np.mean(rates)))
+        if not quiet:
+            csv_row(f"tau_sweep/tau{tau}", 0.0,
+                    f"out_err={out[tau][0]:.4f};corr_rate={out[tau][1]:.3f}")
+    return out
+
+
+def main():
+    run()
+    tau_sweep()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Query-similarity (paper Fig. 3 / Table 8) and correction-rate (Table 9)
+measurements on our models.
+
+Two sources:
+  * a briefly-trained reduced model decoding synthetic text (real q vectors
+    through the full stack), per-layer mean adjacent-step cosine similarity;
+  * the structured attention process at several drift rates, correction rate
+    vs tau (Table 9 analogue).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _common import attention_process, csv_row
+from repro.configs import get_config
+from repro.configs.base import FreeKVConfig
+from repro.core.correction import query_similarity
+from repro.core.retrieval import make_retriever
+from repro.data.synthetic import lm_batches
+from repro.models.model import init_params, prefill, serve_step
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_train, make_train_step
+
+
+def model_query_similarity(arch="smollm-360m-smoke", train_steps=40,
+                           decode_steps=24, quiet=False):
+    """Train briefly, then decode and measure per-step query similarity via
+    serve_step's aggregated stats (sim_sum / sim_cnt)."""
+    cfg = get_config(arch)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=train_steps + 10)
+    params, opt_state = init_train(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, opt))
+    data = lm_batches(cfg.vocab_size, 128, 8, seed=0)
+    for _ in range(train_steps):
+        params, opt_state, _ = step(params, opt_state,
+                                    {"tokens": jnp.asarray(next(data))})
+    fkv = FreeKVConfig(method="freekv", page_size=8, budget=96, n_sink=16,
+                       n_window=16, tau=0.8)
+    batch = {"tokens": jnp.asarray(next(data))[:2, :96]}
+    logits, st = jax.jit(lambda p, b: prefill(
+        cfg, fkv, p, b, max_len=256, state_dtype=jnp.float32))(params, batch)
+    sims = []
+    tok = jnp.argmax(logits, -1)[:, None]
+    sstep = jax.jit(lambda p, s, t: serve_step(cfg, fkv, p, s, t,
+                                               collect_stats=True))
+    for i in range(decode_steps):
+        logits, st, stats = sstep(params, st, tok)
+        tok = jnp.argmax(logits, -1)[:, None]
+        if i > 0:  # step 0 compares against prefill qprev
+            sims.append(float(np.sum(np.asarray(stats["sim_sum"]))
+                              / np.sum(np.asarray(stats["sim_cnt"]))))
+    mean_sim = float(np.mean(sims))
+    if not quiet:
+        csv_row(f"query_similarity/{arch}", 0.0,
+                f"mean_adjacent_cos={mean_sim:.3f}")
+    return mean_sim
+
+
+def correction_rates(arch="granite-3-8b-smoke", B=4, T=512, steps=48,
+                     quiet=False):
+    """Correction rate vs tau and query drift (Table 9 analogue)."""
+    cfg = get_config(arch)
+    p = 16
+    out = {}
+    for drift in (0.02, 0.1, 0.3):
+        key = jax.random.PRNGKey(1)
+        k, v, query_walk = attention_process(key, cfg, B, T, drift=drift)
+        qs = query_walk(steps)
+        for tau in (0.8, 0.9):
+            fkv = FreeKVConfig(method="freekv", page_size=p, budget=128,
+                               n_sink=32, n_window=32, tau=tau)
+            r = make_retriever(cfg, fkv)
+            st = r.init_state(B, T + steps + p, jnp.float32)
+            st = r.prefill(st, k, v, qs[:, 0])
+            rates, sims = [], []
+            for i in range(1, steps):
+                o, st, info = r.decode(st, qs[:, i], k[:, i % T], v[:, i % T])
+                rates.append(float(np.asarray(info["corrected"]).mean()))
+                sims.append(float(np.asarray(info["similarity"]).mean()))
+            out[(drift, tau)] = (float(np.mean(rates)), float(np.mean(sims)))
+            if not quiet:
+                csv_row(f"correction_rate/drift{drift}/tau{tau}", 0.0,
+                        f"rate={np.mean(rates):.3f};sim={np.mean(sims):.3f}")
+    return out
+
+
+def main():
+    model_query_similarity()
+    correction_rates()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end serving driver: batched long-context requests, comparing KV
+retrieval methods (full / quest / arkvale / freekv) on identical prompts —
+greedy outputs, per-step decode latency, retrieval statistics.
+
+    PYTHONPATH=src python examples/serve_longcontext.py [--context 512]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import FreeKVConfig
+from repro.data.synthetic import needle_stream
+from repro.models.model import init_params
+from repro.serving.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--context", type=int, default=512)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--batch", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_config("granite-3-8b-smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    page = 16
+    needle = needle_stream(cfg.vocab_size, args.context, page, seed=1)
+    prompts = [next(needle).tokens for _ in range(args.batch)]
+
+    budget = max(96, args.context // 4 // page * page)
+    methods = {
+        "full": FreeKVConfig(method="full"),
+        "quest": FreeKVConfig(method="quest", page_size=page, budget=budget,
+                              n_sink=page * 2, n_window=page * 2),
+        "arkvale": FreeKVConfig(method="arkvale", page_size=page,
+                                budget=budget, n_sink=page * 2,
+                                n_window=page * 2),
+        "freekv": FreeKVConfig(method="freekv", page_size=page, budget=budget,
+                               n_sink=page * 2, n_window=page * 2, tau=0.8),
+    }
+    ref = None
+    for name, fkv in methods.items():
+        eng = ServeEngine(cfg, fkv, params,
+                          max_len=args.context + args.new_tokens + page,
+                          batch_size=args.batch)
+        reqs = [Request(uid=i, tokens=p, max_new_tokens=args.new_tokens)
+                for i, p in enumerate(prompts)]
+        outs = eng.generate(reqs)
+        toks = outs[0].tokens
+        if name == "full":
+            ref = toks
+        agree = (np.mean([a == b for a, b in zip(toks, ref)])
+                 if ref else float("nan"))
+        o = outs[0]
+        print(f"{name:8s} step={o.decode_s/o.steps*1e3:7.1f} ms "
+              f"match_vs_full={agree:.2f} "
+              f"corr_rate={o.stats.get('correction_rate', 0):.3f} "
+              f"tokens={toks[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Architecture config registry.
+
+``get_config(name)`` returns the exact assigned config; ``--arch <id>`` in the
+launchers resolves through this registry. ASSIGNED is the 10-arch pool assigned
+to this paper; PAPER_MODELS are the models FreeKV itself evaluates on.
+"""
+from importlib import import_module
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig, FreeKVConfig, MeshConfig, ShapeConfig,
+    SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
+    SINGLE_POD, MULTI_POD, reduce_for_smoke,
+    ATTN, ATTN_LOCAL, MAMBA, MLSTM, SLSTM, DENSE, MOE, NONE,
+)
+
+_MODULES = {
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "xlstm-350m": "xlstm_350m",
+    "internvl2-26b": "internvl2_26b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "granite-3-8b": "granite_3_8b",
+    "whisper-tiny": "whisper_tiny",
+    "stablelm-3b": "stablelm_3b",
+    "gemma2-2b": "gemma2_2b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "smollm-360m": "smollm_360m",
+    "llama31-8b": "llama31_8b",
+    "qwen25-7b": "qwen25_7b",
+}
+
+ASSIGNED = (
+    "deepseek-moe-16b", "xlstm-350m", "internvl2-26b", "llama4-scout-17b-a16e",
+    "granite-3-8b", "whisper-tiny", "stablelm-3b", "gemma2-2b",
+    "jamba-1.5-large-398b", "smollm-360m",
+)
+PAPER_MODELS = ("llama31-8b", "qwen25-7b")
+
+
+def get_config(name: str) -> ArchConfig:
+    if name.endswith("-smoke"):
+        return reduce_for_smoke(get_config(name[: -len("-smoke")]))
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return import_module(f"repro.configs.{_MODULES[name]}").CONFIG
+
+
+def list_archs():
+    return list(_MODULES)

@@ -1,0 +1,290 @@
+"""Config dataclasses for architectures, input shapes, meshes and FreeKV.
+
+Every assigned architecture gets one module in this package defining
+``CONFIG: ArchConfig`` with the exact dimensions from the assignment table
+(source paper / model card cited in the module docstring).
+
+Layer structure is expressed as ``prelude + pattern * n_periods`` where each
+layer is a ``(mixer, ffn)`` pair. This lets the model stack params per pattern
+position and run ``jax.lax.scan`` over periods, keeping HLO size O(pattern)
+instead of O(n_layers) — essential for the 512-device dry-run compiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer kinds
+# ---------------------------------------------------------------------------
+# mixer kinds
+ATTN = "attn"            # global softmax attention (GQA)
+ATTN_LOCAL = "attn_local"  # sliding-window attention
+MAMBA = "mamba"          # Mamba-1 selective SSM
+MLSTM = "mlstm"          # xLSTM matrix-memory block
+SLSTM = "slstm"          # xLSTM scalar-memory block
+# ffn kinds
+DENSE = "dense"
+MOE = "moe"
+NONE = "none"            # block has no separate FFN (xLSTM blocks)
+
+Layer = Tuple[str, str]  # (mixer, ffn)
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    source: str                      # citation from the assignment table
+
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    # layer layout: prelude (unscanned) + pattern * n_periods (scanned)
+    prelude: Tuple[Layer, ...] = ()
+    pattern: Tuple[Layer, ...] = ((ATTN, DENSE),)
+    n_periods: int = 0               # 0 -> derived: (n_layers-len(prelude))/len(pattern)
+
+    d_head: int = 0                  # 0 -> d_model // n_heads
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "silu"                # silu | gelu
+    gated_mlp: bool = True
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0       # stablelm uses partial rotary
+    sliding_window: int = 4096       # for ATTN_LOCAL mixers
+    attn_logit_softcap: Optional[float] = None    # gemma2
+    final_logit_softcap: Optional[float] = None   # gemma2
+    post_block_norm: bool = False    # gemma2 pre+post norms
+    tie_embeddings: bool = False
+    attn_scale: Optional[float] = None  # None -> 1/sqrt(d_head)
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 0
+    d_expert: int = 0                # routed-expert hidden dim (fine-grained MoE)
+    router_aux_loss: float = 0.01
+
+    # SSM (mamba)
+    ssm_d_state: int = 16
+    ssm_d_conv: int = 4
+    ssm_expand: int = 2
+
+    # xLSTM
+    xlstm_qk_dim_factor: float = 0.5
+    xlstm_proj_factor: float = 2.0
+
+    # encoder-decoder / modality frontend
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    frontend: Optional[str] = None   # audio | vision | None
+    n_frontend_tokens: int = 0       # stub embedding count (audio frames / patches)
+
+    max_position_embeddings: int = 1 << 20
+
+    # ---------------------------------------------------------------
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+        if self.n_periods == 0:
+            body = self.n_layers - len(self.prelude)
+            assert body % len(self.pattern) == 0, (
+                f"{self.name}: {body} layers not divisible by pattern "
+                f"{len(self.pattern)}")
+            object.__setattr__(self, "n_periods", body // len(self.pattern))
+        assert len(self.prelude) + len(self.pattern) * self.n_periods == self.n_layers
+
+    # -- derived -----------------------------------------------------
+    @property
+    def group_size(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def layers(self) -> Tuple[Layer, ...]:
+        return self.prelude + self.pattern * self.n_periods
+
+    def has_mixer(self, kind: str) -> bool:
+        return any(m == kind for m, _ in self.layers)
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.has_mixer(ATTN) or self.has_mixer(ATTN_LOCAL)
+
+    @property
+    def uses_moe(self) -> bool:
+        return any(f == MOE for _, f in self.layers)
+
+    def padded_vocab(self, multiple: int = 512) -> int:
+        return ((self.vocab_size + multiple - 1) // multiple) * multiple
+
+    # parameter count estimate (for roofline MODEL_FLOPS = 6 N D)
+    def param_counts(self) -> dict:
+        """Returns {'total': N, 'active': N_active} (active counts top-k experts)."""
+        d, dh = self.d_model, self.d_head
+        emb = self.padded_vocab() * d * (1 if self.tie_embeddings else 2)
+        total = active = emb
+        for mixer, ffn in self.layers:
+            if mixer in (ATTN, ATTN_LOCAL):
+                p = d * dh * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * dh * d
+            elif mixer == MAMBA:
+                di = self.ssm_expand * d
+                p = (d * di * 2 + di * self.ssm_d_conv
+                     + di * (self.ssm_d_state * 2 + 2) + di * d)
+            elif mixer in (MLSTM, SLSTM):
+                di = int(self.xlstm_proj_factor * d)
+                dqk = int(self.xlstm_qk_dim_factor * di)
+                p = d * (2 * dqk + 2 * di) + di * d + 3 * di
+            else:
+                raise ValueError(mixer)
+            total += p
+            active += p
+            if ffn == DENSE:
+                f = d * self.d_ff * (3 if self.gated_mlp else 2)
+                total += f
+                active += f
+            elif ffn == MOE:
+                de = self.d_expert or self.d_ff
+                per = d * de * (3 if self.gated_mlp else 2)
+                total += per * (self.n_experts + self.n_shared_experts) + d * self.n_experts
+                active += per * (self.moe_top_k + self.n_shared_experts) + d * self.n_experts
+        if self.is_encoder_decoder:
+            # encoder layers (attention + dense ffn) + cross-attention in decoder
+            p = (d * dh * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * dh * d
+                 + d * self.d_ff * (3 if self.gated_mlp else 2))
+            total += p * self.n_encoder_layers
+            active += p * self.n_encoder_layers
+            xattn = (d * dh * (self.n_heads + 2 * self.n_kv_heads)
+                     + self.n_heads * dh * d) * self.n_layers
+            total += xattn
+            active += xattn
+        return {"total": total, "active": active}
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+# ---------------------------------------------------------------------------
+# FreeKV runtime config
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class FreeKVConfig:
+    method: str = "freekv"      # freekv | full | streaming | raas | quest |
+                                # arkvale | shadowkv | infinigen
+    page_size: int = 32
+    budget: int = 2048          # B — tokens resident on device
+    n_sink: int = 128           # S
+    n_window: int = 128         # W (ring buffer of recent tokens)
+    tau: float = 0.8            # correction threshold (0.9 for long-generation)
+    summary: str = "minmax"     # minmax | mean | bounding
+    group_pool: str = "mean_softmax"  # MeanS (paper's choice); also max_q, mean_q,
+                                      # max_qk, mean_qk, max_softmax
+    offload: str = "sim"        # sim | host  (host = pinned_host memory kind)
+    use_kernels: bool = False   # Pallas kernels (interpret on CPU) vs jnp path
+    skip_first_layer: bool = True  # standard practice: no compression on layer 0
+    # ShadowKV-like baseline
+    svd_rank: int = 160
+    # RaaS-like baseline
+    raas_decay: int = 512
+    # pool page-count padding multiple (512 for production meshes so the page
+    # dim shards over any axis combination; 1 for small tests)
+    pool_pad_pages: int = 1
+    # beyond-paper (paper §6 cites top-p sparsity as orthogonal): dynamic
+    # page budget — keep the smallest page set whose pooled softmax mass
+    # reaches select_top_p (capped at the static budget). 0 = off.
+    select_top_p: float = 0.0
+    # beyond-paper (§Perf): shard-local selection + recall + LSE-merged
+    # partial attention over the page-sharded pool — removes the cross-shard
+    # recall psum and distributes decode attention over the model axis.
+    # Selection becomes top-(n_sel/model) PER page shard (approximate).
+    sharded_retrieval: bool = False
+    # opt2 mitigation (§Perf): each shard over-selects osx candidates and a
+    # tiny score all-gather re-ranks them globally — restores global top-k
+    # whenever no shard holds more than os*k/mp of the true top-k.
+    sharded_overselect: int = 1
+
+    @property
+    def n_selectable(self) -> int:
+        return self.budget - self.n_sink - self.n_window
+
+    @property
+    def budget_pages(self) -> int:
+        return self.budget // self.page_size
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...] = (16, 16)
+    axes: Tuple[str, ...] = ("data", "model")
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+SINGLE_POD = MeshConfig((16, 16), ("data", "model"))
+MULTI_POD = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# Reduced ("smoke") variants — 2 layers, d_model<=512, <=4 experts
+# ---------------------------------------------------------------------------
+def reduce_for_smoke(cfg: ArchConfig) -> ArchConfig:
+    """Reduced variant of the same family for CPU smoke tests."""
+    pat = cfg.pattern
+    # keep one period of the pattern, truncated to <=2 layers but preserving
+    # the interesting mixers (e.g. keep the attn layer of jamba's period).
+    if len(pat) > 2:
+        # one layer per distinct mixer (preserving order), preferring the MoE
+        # FFN variant of each so the smoke test exercises routing too
+        chosen = {}
+        order = []
+        for m, f in pat:
+            if m not in chosen:
+                chosen[m] = f
+                order.append(m)
+            elif f == MOE:
+                chosen[m] = f
+        pat = tuple((m, chosen[m]) for m in order[:2])
+    prelude = cfg.prelude[:1]
+    n_layers = len(prelude) + len(pat)
+    d_model = min(cfg.d_model, 256)
+    n_heads = 4
+    n_kv = max(1, min(cfg.n_kv_heads, 2))
+    changes = dict(
+        n_layers=n_layers, d_model=d_model, n_heads=n_heads, n_kv_heads=n_kv,
+        d_head=d_model // n_heads, d_ff=max(cfg.d_ff and 512, 0) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 1024), prelude=prelude, pattern=pat,
+        n_periods=1, sliding_window=64,
+        n_encoder_layers=min(cfg.n_encoder_layers, 2),
+        n_frontend_tokens=min(cfg.n_frontend_tokens, 16) if cfg.n_frontend_tokens else 0,
+        max_position_embeddings=1 << 16,
+    )
+    if cfg.n_experts:
+        changes.update(n_experts=4, moe_top_k=min(cfg.moe_top_k, 2),
+                       n_shared_experts=min(cfg.n_shared_experts, 1),
+                       d_expert=128 if cfg.d_expert else 0)
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **changes)

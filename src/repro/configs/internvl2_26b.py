@@ -1,0 +1,13 @@
+"""internvl2-26b [vlm] — InternViT + InternLM2 [arXiv:2404.16821]. The vision encoder
++ MLP projector are STUBBED per the assignment carve-out: input_specs() provides
+precomputed patch embeddings (n_frontend_tokens x d_model). This config is the
+InternLM2-20B-style language backbone (GQA, rmsnorm, silu)."""
+from repro.configs.base import ArchConfig, ATTN, DENSE
+
+CONFIG = ArchConfig(
+    name="internvl2-26b", family="vlm", source="arXiv:2404.16821",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=16384,
+    vocab_size=92553,
+    pattern=((ATTN, DENSE),), n_periods=48,
+    rope_theta=1000000.0, frontend="vision", n_frontend_tokens=1024,
+)

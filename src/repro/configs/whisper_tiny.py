@@ -1,0 +1,15 @@
+"""whisper-tiny [audio] — encoder-decoder, conv/mel frontend STUBBED per the carve-out
+[arXiv:2212.04356]: input_specs() provides precomputed frame embeddings (1500 x d).
+LayerNorm + non-gated GELU MLP, MHA (kv=6). Positions use RoPE in this repro
+(adaptation: original uses sinusoidal/learned; noted in DESIGN.md)."""
+from repro.configs.base import ArchConfig, ATTN, DENSE
+
+CONFIG = ArchConfig(
+    name="whisper-tiny", family="audio", source="arXiv:2212.04356",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6, d_ff=1536,
+    vocab_size=51865,
+    pattern=((ATTN, DENSE),), n_periods=4,
+    norm="layernorm", act="gelu", gated_mlp=False,
+    is_encoder_decoder=True, n_encoder_layers=4,
+    frontend="audio", n_frontend_tokens=1500,
+)

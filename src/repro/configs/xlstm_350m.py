@@ -1,0 +1,13 @@
+"""xlstm-350m [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517]. d_ff=0: xLSTM blocks
+carry their own up/down projections (proj_factor), no separate FFN. We interleave one
+sLSTM per 6 blocks (paper uses sparse sLSTM placement)."""
+from repro.configs.base import ArchConfig, MLSTM, SLSTM, NONE
+
+CONFIG = ArchConfig(
+    name="xlstm-350m", family="ssm", source="arXiv:2405.04517",
+    n_layers=24, d_model=1024, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab_size=50304,
+    pattern=((MLSTM, NONE),) * 5 + ((SLSTM, NONE),), n_periods=4,
+    norm="layernorm", act="gelu", gated_mlp=False,
+    xlstm_proj_factor=2.0, xlstm_qk_dim_factor=0.5,
+)

@@ -1,0 +1,32 @@
+"""Fine-grained correction (§3.3): query-based identification via cosine
+similarity of adjacent decode-step queries, group-mean pooled per KV head,
+triggering head-wise synchronous recall when C_i < tau.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, FreeKVConfig
+
+
+def query_similarity(q, qprev, eps=1e-6):
+    """Per-q-head cosine similarity. q, qprev: (B, H, d) -> (B, H) fp32."""
+    qf = q.astype(jnp.float32)
+    pf = qprev.astype(jnp.float32)
+    num = jnp.sum(qf * pf, axis=-1)
+    den = jnp.linalg.norm(qf, axis=-1) * jnp.linalg.norm(pf, axis=-1)
+    return num / jnp.maximum(den, eps)
+
+
+def corrected_heads(cfg: ArchConfig, fkv: FreeKVConfig, q, qprev, pool="mean"):
+    """Which KV heads need synchronous correction this step.
+
+    Returns (corr (B, kv) bool, sim_grouped (B, kv) fp32). ``pool`` is the
+    group-consistency pooling over C_i (App. B.3: mean is the paper's choice;
+    max triggers more corrections for the same tau)."""
+    B, H, _ = q.shape
+    kv = cfg.n_kv_heads
+    sim = query_similarity(q, qprev).reshape(B, kv, H // kv)
+    g = sim.mean(axis=-1) if pool == "mean" else sim.min(axis=-1)
+    # (max pooling over *dissimilarity* == min pooling over similarity)
+    return g < fkv.tau, g

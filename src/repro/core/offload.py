@@ -1,0 +1,71 @@
+"""Host offload of the KV pool via JAX memory kinds (the paper's CPU-DRAM
+offload, TPU-native).
+
+``fkv.offload == "host"`` places the per-layer pool (and page summaries) in
+``pinned_host`` memory; XLA inserts host<->device DMA for the page
+scatter (offload path, amortized per completed page) and the recall gather
+(the paper's streamed recall). ``"sim"`` keeps the pool in device memory and
+accounts transfer costs analytically (benchmarks/_common.py) — the default on
+platforms where compute on host-resident buffers is unsupported.
+
+Usage:
+    state = place_decode_state(state, fkv)            # after init/prefill
+    shardings = decode_state_shardings(..., fkv=fkv)  # dryrun: memory kinds
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import FreeKVConfig
+
+HOST_KEYS = ("pool",)          # summaries stay in HBM (read every step)
+
+
+def _host_kind_available() -> bool:
+    try:
+        kinds = [m.kind for m in jax.devices()[0].addressable_memories()]
+        return "pinned_host" in kinds
+    except Exception:  # noqa: BLE001
+        return False
+
+
+def host_sharding_for(leaf, mesh=None, spec=None):
+    """A sharding equivalent to the leaf's current one but in pinned_host."""
+    if mesh is not None and spec is not None:
+        return jax.sharding.NamedSharding(mesh, spec,
+                                          memory_kind="pinned_host")
+    dev = jax.devices()[0]
+    return jax.sharding.SingleDeviceSharding(dev, memory_kind="pinned_host")
+
+
+def place_decode_state(state, fkv: FreeKVConfig, mesh=None, specs=None):
+    """Move the pool leaves of a (possibly nested, layer-stacked) decode state
+    to pinned_host memory. No-op for offload != 'host' or unsupported hosts."""
+    if fkv.offload != "host" or not _host_kind_available():
+        return state
+
+    def move(path, leaf):
+        key = str(getattr(path[-1], "key", path[-1]))
+        if key in HOST_KEYS and hasattr(leaf, "shape"):
+            sh = None
+            if specs is not None:
+                sh = specs
+            return jax.device_put(leaf, host_sharding_for(leaf, mesh, sh))
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(move, state)
+
+
+def pool_bytes(state) -> int:
+    """Total bytes resident in the (host) pool across layers (telemetry)."""
+    total = 0
+
+    def acc(path, leaf):
+        nonlocal total
+        key = str(getattr(path[-1], "key", path[-1]))
+        if key in HOST_KEYS and hasattr(leaf, "nbytes"):
+            total += leaf.nbytes
+        return leaf
+
+    jax.tree_util.tree_map_with_path(acc, state)
+    return total

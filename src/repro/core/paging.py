@@ -1,0 +1,162 @@
+"""KV paging + the paper's hybrid layouts (§4.2).
+
+Host pool uses the **HND** layout ``(B, n_pages, n_kv, 2, p, d)`` — for one
+(KV-head, page) the ``(2, p, d)`` K+V block is contiguous, the paper's maximal
+transfer unit (2·p·d elements, 16 KiB at p=32, d=128, bf16).
+
+Device-side caches use the **NHD** layout ``(..., p, n_kv, d)`` (token-major) so
+appending freshly projected K/V needs no transpose; the NHD→HND transpose happens
+once per page at offload time (amortized, off the critical path).
+
+All state is a flat dict of arrays so it scans over layers and shards under pjit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, FreeKVConfig
+
+
+def state_dims(cfg: ArchConfig, fkv: FreeKVConfig, max_len: int):
+    p = fkv.page_size
+    n_pages = -(-max_len // p)
+    m = fkv.pool_pad_pages
+    n_pages = -(-n_pages // m) * m
+    n_sink = fkv.n_sink
+    n_win = fkv.n_window + p          # ring slack so a completing page is present
+    n_sel = max(1, (fkv.budget - fkv.n_sink - fkv.n_window) // p)
+    if fkv.sharded_retrieval and fkv.sharded_overselect > 1:
+        # §Perf opt2 mitigation: extra (invalid-padded) slots so a shard can
+        # hold up to overselect x its fair share of globally chosen pages
+        n_sel *= fkv.sharded_overselect
+    return p, n_pages, n_sink, n_win, n_sel
+
+
+def init_kv_state(cfg: ArchConfig, fkv: FreeKVConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    """Per-layer FreeKV decode state."""
+    p, n_pages, n_sink, n_win, n_sel = state_dims(cfg, fkv, max_len)
+    kv, d, H = cfg.n_kv_heads, cfg.d_head, cfg.n_heads
+    return {
+        # host pool, HND hybrid layout (offloaded; memory-kind applied by launcher)
+        "pool": jnp.zeros((batch, n_pages, kv, 2, p, d), dtype),
+        # min/max pooled key summaries per page (paper: Quest-style min-max)
+        "summ": jnp.zeros((batch, n_pages, kv, 2, d), dtype),
+        # device-resident regions (NHD)
+        "sink_k": jnp.zeros((batch, n_sink, kv, d), dtype),
+        "sink_v": jnp.zeros((batch, n_sink, kv, d), dtype),
+        "win_k": jnp.zeros((batch, n_win, kv, d), dtype),
+        "win_v": jnp.zeros((batch, n_win, kv, d), dtype),
+        "win_pos": jnp.full((batch, n_win), -1, jnp.int32),
+        # speculatively recalled pages, per KV head (group-consistent => n_kv)
+        "sel_k": jnp.zeros((batch, kv, n_sel, p, d), dtype),
+        "sel_v": jnp.zeros((batch, kv, n_sel, p, d), dtype),
+        "sel_idx": jnp.full((batch, kv, n_sel), -1, jnp.int32),
+        # previous decode step's query vectors (for correction, §3.3)
+        "qprev": jnp.zeros((batch, H, d), dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# layout conversions
+# ---------------------------------------------------------------------------
+def nhd_pages_to_hnd(k_pages, v_pages):
+    """(B, n, p, kv, d) K and V -> pool block (B, n, kv, 2, p, d) (HND)."""
+    k = k_pages.transpose(0, 1, 3, 2, 4)   # (B,n,kv,p,d)
+    v = v_pages.transpose(0, 1, 3, 2, 4)
+    return jnp.stack([k, v], axis=3)       # (B,n,kv,2,p,d)
+
+
+def hnd_to_nhd_kv(block):
+    """pool block (B, ..., kv, 2, p, d) -> (k, v) each (B, ..., kv, p, d)."""
+    return block[..., 0, :, :], block[..., 1, :, :]
+
+
+# ---------------------------------------------------------------------------
+# bulk (prefill) pool construction
+# ---------------------------------------------------------------------------
+def prefill_fill_pool(state, k, v, length):
+    """Insert a prefill's K/V (B, T, kv, d) into pool + window + sink.
+
+    T must be the (static) prefill length; ``length`` (B,) <= T gives per-row
+    valid lengths (rows are right-aligned at position length-1).
+    For simplicity rows share T in this framework (continuous batching pads).
+    """
+    B, T, kv, d = k.shape
+    n_pages_total = state["pool"].shape[1]
+    p = state["pool"].shape[4]
+    n_full = T // p
+    kp = k[:, : n_full * p].reshape(B, n_full, p, kv, d)
+    vp = v[:, : n_full * p].reshape(B, n_full, p, kv, d)
+    hnd = nhd_pages_to_hnd(kp, vp)
+    pool = jax.lax.dynamic_update_slice(
+        state["pool"], hnd.astype(state["pool"].dtype), (0, 0, 0, 0, 0, 0))
+    summ = jnp.stack([kp.min(axis=2), kp.max(axis=2)], axis=3)  # (B,n,kv,2,d)
+    summaries = jax.lax.dynamic_update_slice(
+        state["summ"], summ.astype(state["summ"].dtype), (0, 0, 0, 0, 0))
+
+    n_sink = state["sink_k"].shape[1]
+    n_win = state["win_k"].shape[1]
+    sink_k = k[:, :n_sink]
+    sink_v = v[:, :n_sink]
+    win_k = k[:, T - n_win: T]
+    win_v = v[:, T - n_win: T]
+    # ring layout: token at absolute position q lives in slot q % n_win
+    tail_pos = jnp.arange(T - n_win, T)
+    slots = tail_pos % n_win
+    wk = jnp.zeros_like(state["win_k"]).at[:, slots].set(win_k.astype(state["win_k"].dtype))
+    wv = jnp.zeros_like(state["win_v"]).at[:, slots].set(win_v.astype(state["win_v"].dtype))
+    wpos = jnp.full_like(state["win_pos"], -1).at[:, slots].set(
+        jnp.broadcast_to(tail_pos, (B, n_win)).astype(jnp.int32))
+    return dict(state, pool=pool, summ=summaries,
+                sink_k=sink_k.astype(state["sink_k"].dtype),
+                sink_v=sink_v.astype(state["sink_v"].dtype),
+                win_k=wk, win_v=wv, win_pos=wpos,
+                length=jnp.broadcast_to(length, (B,)).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# decode-time append + page offload (NHD -> HND transpose amortized here)
+# ---------------------------------------------------------------------------
+def append_token(state, k_new, v_new):
+    """Append one token's K/V (B, kv, d); offload a page when one completes.
+
+    The page completion test is per-row; the pool scatter is masked so rows not
+    at a page boundary write nothing (a no-op row writes to its current page
+    position with zero-effect data is avoided via index clamping + where).
+    """
+    B, n_win, kv, d = state["win_k"].shape
+    p = state["pool"].shape[4]
+    pos = state["length"]                          # (B,) position of new token
+    slot = pos % n_win
+    bidx = jnp.arange(B)
+    win_k = state["win_k"].at[bidx, slot].set(k_new.astype(state["win_k"].dtype))
+    win_v = state["win_v"].at[bidx, slot].set(v_new.astype(state["win_v"].dtype))
+    win_pos = state["win_pos"].at[bidx, slot].set(pos)
+
+    new_len = pos + 1
+    page_done = (new_len % p) == 0                 # (B,)
+    page_idx = new_len // p - 1                    # page just completed
+    # gather the completed page's tokens from the ring: positions
+    # [page_idx*p, page_idx*p + p) -> slots (pos % n_win)
+    tok_pos = page_idx[:, None] * p + jnp.arange(p)[None, :]      # (B,p)
+    tok_slot = tok_pos % n_win
+    pk = jnp.take_along_axis(win_k, tok_slot[:, :, None, None], axis=1)  # (B,p,kv,d)
+    pv = jnp.take_along_axis(win_v, tok_slot[:, :, None, None], axis=1)
+    hnd = nhd_pages_to_hnd(pk[:, None], pv[:, None])[:, 0]        # (B,kv,2,p,d)
+    summ = jnp.stack([pk.min(axis=1), pk.max(axis=1)], axis=2)    # (B,kv,2,d)
+
+    tgt = jnp.where(page_done, page_idx, 0)
+    old_pool_row = jnp.take_along_axis(
+        state["pool"], tgt[:, None, None, None, None, None], axis=1)[:, 0]
+    old_summ_row = jnp.take_along_axis(
+        state["summ"], tgt[:, None, None, None, None], axis=1)[:, 0]
+    sel = page_done[:, None, None, None, None]
+    pool = state["pool"].at[bidx, tgt].set(
+        jnp.where(sel, hnd.astype(state["pool"].dtype), old_pool_row))
+    summaries = state["summ"].at[bidx, tgt].set(
+        jnp.where(sel[..., 0], summ.astype(state["summ"].dtype), old_summ_row))
+    return dict(state, win_k=win_k, win_v=win_v, win_pos=win_pos,
+                pool=pool, summ=summaries, length=new_len)

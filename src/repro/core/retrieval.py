@@ -1,0 +1,606 @@
+"""Retrievers: FreeKV (the paper) + the baselines it compares against, behind a
+uniform functional API so the model stack and serving engine are method-agnostic:
+
+    r = make_retriever(cfg, fkv)
+    state = r.init_state(batch, max_len, dtype)
+    state = r.prefill(state, k, v, q_last)         # bulk-insert a prompt
+    o, state, info = r.decode(state, q, k_new, v_new[, q_proxy])
+
+Shapes: k/v (B,T,kv,dh) post-RoPE; q (B,H,dh) single decode token.
+``info`` carries per-step statistics for the latency cost model (bytes recalled
+on/off the critical path, correction counts, similarities).
+
+Methods:
+  freekv     speculative retrieval + fine-grained correction (the paper)
+  arkvale    fresh selection + blocking recall each step (tau=inf ~ always correct)
+  infinigen  selection from a proxy query (prev layer), token-wise recall
+  quest      per-q-head (non-group-consistent) selection, no offload
+  shadowkv   low-rank keys on device, V-only recall
+  raas       dynamic dropping with recency timestamps (no pool)
+  streaming  sink + window only (StreamingLLM / Razor-style static)
+  full       exact dense cache (oracle)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, FreeKVConfig
+from repro.core import paging, recall, selection
+from repro.core.correction import corrected_heads
+from repro.models.layers import softcap
+
+NEG_INF = -1e30
+
+
+def _scale(cfg):
+    return cfg.attn_scale if cfg.attn_scale is not None else 1.0 / (cfg.d_head ** 0.5)
+
+
+def _attend(cfg, q, k_cat, v_cat, pos_cat, cur_pos, window=None,
+            fkv=None, use_kernels=False):
+    """q (B,H,d); k/v_cat (B,kv,L,d); pos_cat (B,kv,L) -> (B,H,d).
+
+    With ``use_kernels`` (single-device path) this dispatches to the Pallas
+    paged-attention kernel (interpret-mode on CPU, Mosaic on TPU)."""
+    B, H, d = q.shape
+    if (use_kernels and window is None and fkv is not None
+            and k_cat.shape[2] % fkv.page_size == 0):
+        from repro.kernels import ops
+        p = fkv.page_size
+        kv_ = k_cat.shape[1]
+        G_ = H // kv_
+        L = k_cat.shape[2]
+        o = ops.paged_attention(
+            q.reshape(B, kv_, G_, d),
+            k_cat.reshape(B, kv_, L // p, p, d),
+            v_cat.reshape(B, kv_, L // p, p, d),
+            pos_cat.reshape(B, kv_, L // p, p), cur_pos,
+            scale=_scale(cfg), softcap=cfg.attn_logit_softcap)
+        return o.reshape(B, H, d)
+    kv = k_cat.shape[1]
+    G = H // kv
+    qg = q.reshape(B, kv, G, d)
+    s = jnp.einsum("bkgd,bkld->bkgl", qg, k_cat).astype(jnp.float32) * _scale(cfg)
+    s = softcap(s, cfg.attn_logit_softcap)
+    ok = (pos_cat >= 0) & (pos_cat <= cur_pos[:, None, None])
+    if window is not None:
+        ok &= pos_cat > (cur_pos[:, None, None] - window)
+    s = jnp.where(ok[:, :, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgl,bkld->bkgd", w.astype(v_cat.dtype), v_cat)
+    return o.reshape(B, H, d)
+
+
+def _window_floor(fkv, length):
+    """First position attended via the window ring. Tokens in
+    [n_sink, window_floor) are attended via selected pages; the partition
+    sink / selected / window is exact (no double counting, no gaps):
+    selectable pages are exactly [n_sink//p, window_floor//p)."""
+    p = fkv.page_size
+    return jnp.maximum(fkv.n_sink // p, (length - fkv.n_window) // p) * p
+
+
+def _cat_regions(fkv, state, sel_k, sel_v, sel_idx, p):
+    """Concatenate sink + window + selected pages per KV head, with the
+    three-region position partition applied via pos = -1 masking."""
+    B, n_sink, kv, d = state["sink_k"].shape
+    n_win = state["win_k"].shape[1]
+    length = state["length"]
+    wfloor = _window_floor(fkv, length)[:, None, None]           # (B,1,1)
+    ks = state["sink_k"].transpose(0, 2, 1, 3)                   # (B,kv,S,d)
+    vs = state["sink_v"].transpose(0, 2, 1, 3)
+    pos_s = jnp.broadcast_to(jnp.arange(n_sink)[None, None, :], (B, kv, n_sink))
+    pos_s = jnp.where(pos_s < length[:, None, None], pos_s, -1)
+    kw = state["win_k"].transpose(0, 2, 1, 3)
+    vw = state["win_v"].transpose(0, 2, 1, 3)
+    pos_w = jnp.broadcast_to(state["win_pos"][:, None, :], (B, kv, n_win))
+    pos_w = jnp.where((pos_w >= n_sink) & (pos_w >= wfloor), pos_w, -1)
+    n_sel = sel_idx.shape[2]
+    kp = sel_k.reshape(B, kv, n_sel * p, d)
+    vp = sel_v.reshape(B, kv, n_sel * p, d)
+    pos_p = (sel_idx[..., None] * p + jnp.arange(p)[None, None, None, :])
+    pos_p = jnp.where(sel_idx[..., None] >= 0, pos_p, -1).reshape(B, kv, n_sel * p)
+    pos_p = jnp.where((pos_p >= n_sink) & (pos_p < wfloor), pos_p, -1)
+    k_cat = jnp.concatenate([ks, kw, kp], axis=2)
+    v_cat = jnp.concatenate([vs, vw, vp], axis=2)
+    pos = jnp.concatenate([pos_s, pos_w, pos_p], axis=2).astype(jnp.int32)
+    return k_cat, v_cat, pos
+
+
+class FreeKVRetriever:
+    """FreeKV (and, by flags, ArkVale / InfiniGen-style baselines)."""
+
+    def __init__(self, cfg: ArchConfig, fkv: FreeKVConfig,
+                 speculative: bool = True, proxy_query: bool = False,
+                 token_wise_recall: bool = False, mesh=None):
+        self.cfg, self.fkv = cfg, fkv
+        self.speculative = speculative          # False => ArkVale-style blocking
+        self.proxy_query = proxy_query          # True  => InfiniGen-style
+        self.token_wise_recall = token_wise_recall
+        self.offloaded = True
+        self.mesh = mesh                        # enables shard-local recall
+        self.use_kernels = fkv.use_kernels and mesh is None
+
+    def _recall(self, pool, idx):
+        mesh = self.mesh
+        if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+            if self.use_kernels:
+                from repro.kernels import ops
+                return ops.recall_gather(pool, idx)
+            return recall.recall_pages(pool, idx)
+        import math as _math
+        ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        nb = _math.prod(mesh.shape[a] for a in ba) if ba else 1
+        batch_ok = pool.shape[0] % max(nb, 1) == 0 and pool.shape[0] >= nb
+        kv_div = self.cfg.n_kv_heads % mesh.shape["model"] == 0
+        return recall.recall_pages_sharded(pool, idx, mesh, batch_ok, kv_div)
+
+    # -- state ---------------------------------------------------------
+    def init_state(self, batch, max_len, dtype=jnp.bfloat16):
+        return paging.init_kv_state(self.cfg, self.fkv, batch, max_len, dtype)
+
+    def _n_sel(self, state):
+        return state["sel_idx"].shape[2]
+
+    # -- prefill -------------------------------------------------------
+    def prefill(self, state, k, v, q_last):
+        """k/v (B,T,kv,d); q_last (B,H,d): the prompt's final query, used for
+        the initial speculative selection + recall."""
+        B, T = k.shape[:2]
+        length = jnp.full((B,), T, jnp.int32)
+        state = paging.prefill_fill_pool(state, k, v, length)
+        idx, _ = selection.select_pages(
+            self.cfg, self.fkv, q_last, state["summ"], state["length"],
+            self._n_sel(state))
+        sk, sv = self._recall(state["pool"], idx)
+        return dict(state, sel_k=sk.astype(state["sel_k"].dtype),
+                    sel_v=sv.astype(state["sel_v"].dtype), sel_idx=idx,
+                    qprev=q_last.astype(state["qprev"].dtype))
+
+    def _use_sharded(self, state):
+        mesh = self.mesh
+        if not (self.fkv.sharded_retrieval and mesh is not None
+                and "model" in getattr(mesh, "axis_names", ())):
+            return False
+        mp = mesh.shape["model"]
+        n_sel = state["sel_idx"].shape[2]
+        n_pages = state["pool"].shape[1]
+        return n_sel % mp == 0 and n_pages % mp == 0
+
+    # -- decode --------------------------------------------------------
+    def decode(self, state, q, k_new, v_new, q_proxy=None):
+        cfg, fkv = self.cfg, self.fkv
+        p = fkv.page_size
+        cur_pos = state["length"]                    # position of the new token
+
+        if self._use_sharded(state):             # beyond-paper (§Perf)
+            from repro.core.sharded_retrieval import sharded_decode_step
+            if self.speculative:
+                corr, sim = corrected_heads(cfg, fkv, q, state["qprev"])
+                corr = corr | jnp.all(state["qprev"].astype(jnp.float32) == 0)
+            else:
+                corr = jnp.ones((q.shape[0], cfg.n_kv_heads), bool)
+                sim = jnp.zeros((q.shape[0], cfg.n_kv_heads), jnp.float32)
+            # NOTE: append happens INSIDE the shard body (the page write is
+            # masked to its owning shard) — state here is pre-append
+            o, updates, new_k, new_v, new_idx = sharded_decode_step(
+                cfg, fkv, self.mesh, state, q, k_new, v_new, corr)
+            state = dict(state, **updates,
+                         sel_k=new_k.astype(state["sel_k"].dtype),
+                         sel_v=new_v.astype(state["sel_v"].dtype),
+                         sel_idx=new_idx,
+                         qprev=q.astype(state["qprev"].dtype))
+            n_sel = new_idx.shape[2]
+            info = {"corrected": corr, "similarity": sim,
+                    "sync_pages": jnp.sum(corr, axis=1) * n_sel,
+                    "async_pages": jnp.sum(~corr, axis=1) * n_sel,
+                    "granularity": "page"}
+            return o, state, info
+
+        state = paging.append_token(state, k_new, v_new)
+
+        # --- selection (off critical path for FreeKV: overlaps compute) ----
+        q_sel = q
+        if self.proxy_query and q_proxy is not None:
+            q_sel = q_proxy
+        new_idx, _ = selection.select_pages(
+            cfg, fkv, q_sel, state["summ"], state["length"], self._n_sel(state))
+        new_k, new_v = self._recall(state["pool"], new_idx)
+        new_k = new_k.astype(state["sel_k"].dtype)
+        new_v = new_v.astype(state["sel_v"].dtype)
+
+        # --- fine-grained correction (§3.3) --------------------------------
+        if self.speculative:
+            corr, sim = corrected_heads(cfg, fkv, q, state["qprev"])
+            first_step = state["qprev"].astype(jnp.float32)
+            is_cold = jnp.all(first_step == 0)       # no prefill qprev -> correct
+            corr = corr | is_cold
+            m = corr[:, :, None, None, None]
+            use_k = jnp.where(m, new_k, state["sel_k"])
+            use_v = jnp.where(m, new_v, state["sel_v"])
+            use_idx = jnp.where(corr[:, :, None], new_idx, state["sel_idx"])
+        else:                                        # ArkVale/InfiniGen: always fresh
+            corr = jnp.ones((q.shape[0], cfg.n_kv_heads), bool)
+            sim = jnp.zeros((q.shape[0], cfg.n_kv_heads), jnp.float32)
+            use_k, use_v, use_idx = new_k, new_v, new_idx
+
+        k_cat, v_cat, pos = _cat_regions(fkv, state, use_k, use_v, use_idx, p)
+        o = _attend(cfg, q, k_cat, v_cat, pos, cur_pos, fkv=fkv,
+                    use_kernels=self.use_kernels)
+
+        state = dict(state, sel_k=new_k, sel_v=new_v, sel_idx=new_idx,
+                     qprev=q.astype(state["qprev"].dtype))
+        n_sel = new_idx.shape[2]
+        info = {
+            "corrected": corr, "similarity": sim,
+            # bytes on the critical path (synchronous recall for corrected heads)
+            "sync_pages": jnp.sum(corr, axis=1) * n_sel,
+            # bytes recalled off the critical path (speculative, overlapped)
+            "async_pages": jnp.sum(~corr, axis=1) * n_sel,
+            "granularity": "token" if self.token_wise_recall else "page",
+        }
+        return o, state, info
+
+
+class QuestRetriever(FreeKVRetriever):
+    """Quest: no offload, per-q-head (non-group-consistent) selection -> G x
+    memory traffic; selection+recall are on the critical path."""
+
+    def __init__(self, cfg, fkv):
+        super().__init__(cfg, fkv, speculative=False)
+        self.offloaded = False
+
+    def decode(self, state, q, k_new, v_new, q_proxy=None):
+        cfg, fkv = self.cfg, self.fkv
+        p = fkv.page_size
+        B, H, d = q.shape
+        kv, G = cfg.n_kv_heads, cfg.group_size
+        cur_pos = state["length"]
+        state = paging.append_token(state, k_new, v_new)
+        n_sel = self._n_sel(state)
+        scores = selection.page_scores_minmax(q, state["summ"], _scale(cfg))
+        valid = selection.selectable_mask(cfg, fkv, state["summ"].shape[1],
+                                          state["length"])
+        scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+        _, idx_h = jax.lax.top_k(scores, n_sel)                   # (B,H,n_sel)
+        idx_h = idx_h.astype(jnp.int32)
+        # per-q-head gather: emulate by gathering per KV *group member* (G x)
+        idx_g = idx_h.reshape(B, kv, G, n_sel)
+        outs = []
+        for g in range(G):
+            sk, sv = recall.recall_pages(state["pool"], idx_g[:, :, g])
+            k_cat, v_cat, pos = _cat_regions(fkv, state, sk.astype(q.dtype),
+                                             sv.astype(q.dtype),
+                                             idx_g[:, :, g], p)
+            qh = q.reshape(B, kv, G, d)[:, :, g].reshape(B, kv, d)
+            outs.append(_attend(cfg, qh, k_cat, v_cat, pos, cur_pos))
+        o = jnp.stack(outs, axis=2).reshape(B, kv, G, d).reshape(B, H, d)
+        state = dict(state, qprev=q.astype(state["qprev"].dtype))
+        info = {"corrected": jnp.ones((B, kv), bool),
+                "sync_pages": jnp.full((B,), H * n_sel),
+                "async_pages": jnp.zeros((B,), jnp.int32),
+                "similarity": jnp.zeros((B, kv)), "granularity": "page"}
+        return o, state, info
+
+
+class StreamingRetriever:
+    """Sink + sliding window only (StreamingLLM; Razor-like static dropping).
+    Also used for ATTN_LOCAL layers (gemma2) with window = cfg.sliding_window."""
+
+    def __init__(self, cfg, fkv, window=None, n_sink=None):
+        self.cfg, self.fkv = cfg, fkv
+        self.window = window or fkv.n_window
+        self.n_sink = fkv.n_sink if n_sink is None else n_sink
+        self.offloaded = False
+
+    def init_state(self, batch, max_len, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        kv, d = cfg.n_kv_heads, cfg.d_head
+        n_win = self.window
+        return {
+            "sink_k": jnp.zeros((batch, self.n_sink, kv, d), dtype),
+            "sink_v": jnp.zeros((batch, self.n_sink, kv, d), dtype),
+            "win_k": jnp.zeros((batch, n_win, kv, d), dtype),
+            "win_v": jnp.zeros((batch, n_win, kv, d), dtype),
+            "win_pos": jnp.full((batch, n_win), -1, jnp.int32),
+            "length": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def prefill(self, state, k, v, q_last):
+        B, T = k.shape[:2]
+        n_win = state["win_k"].shape[1]
+        dt = state["win_k"].dtype
+        tail = jnp.arange(max(T - n_win, 0), T)
+        slots = tail % n_win
+        st = dict(state)
+        st["sink_k"] = k[:, : self.n_sink].astype(dt)
+        st["sink_v"] = v[:, : self.n_sink].astype(dt)
+        st["win_k"] = state["win_k"].at[:, slots].set(k[:, tail].astype(dt))
+        st["win_v"] = state["win_v"].at[:, slots].set(v[:, tail].astype(dt))
+        st["win_pos"] = state["win_pos"].at[:, slots].set(
+            jnp.broadcast_to(tail, (B, tail.shape[0])).astype(jnp.int32))
+        st["length"] = jnp.full((B,), T, jnp.int32)
+        return st
+
+    def decode(self, state, q, k_new, v_new, q_proxy=None):
+        cfg = self.cfg
+        B, H, d = q.shape
+        kv = cfg.n_kv_heads
+        n_win = state["win_k"].shape[1]
+        cur_pos = state["length"]
+        slot = cur_pos % n_win
+        bidx = jnp.arange(B)
+        st = dict(state)
+        st["win_k"] = state["win_k"].at[bidx, slot].set(k_new.astype(state["win_k"].dtype))
+        st["win_v"] = state["win_v"].at[bidx, slot].set(v_new.astype(state["win_v"].dtype))
+        st["win_pos"] = state["win_pos"].at[bidx, slot].set(cur_pos)
+        st["length"] = cur_pos + 1
+        n_sink = st["sink_k"].shape[1]
+        ks = st["sink_k"].transpose(0, 2, 1, 3)
+        vs = st["sink_v"].transpose(0, 2, 1, 3)
+        pos_s = jnp.broadcast_to(jnp.arange(n_sink)[None, None, :], (B, kv, n_sink))
+        pos_s = jnp.where(pos_s < st["length"][:, None, None], pos_s, -1)
+        kw = st["win_k"].transpose(0, 2, 1, 3)
+        vw = st["win_v"].transpose(0, 2, 1, 3)
+        pos_w = jnp.broadcast_to(st["win_pos"][:, None, :], (B, kv, n_win))
+        pos_w = jnp.where(pos_w >= n_sink, pos_w, -1)
+        k_cat = jnp.concatenate([ks, kw], axis=2)
+        v_cat = jnp.concatenate([vs, vw], axis=2)
+        pos = jnp.concatenate([pos_s, pos_w], axis=2)
+        o = _attend(cfg, q, k_cat, v_cat, pos, cur_pos)
+        info = {"corrected": jnp.zeros((B, kv), bool),
+                "sync_pages": jnp.zeros((B,), jnp.int32),
+                "async_pages": jnp.zeros((B,), jnp.int32),
+                "similarity": jnp.zeros((B, kv)), "granularity": "page"}
+        return o, st, info
+
+
+class FullRetriever:
+    """Exact dense KV cache — the accuracy oracle / no-compression baseline."""
+
+    def __init__(self, cfg, fkv):
+        self.cfg, self.fkv = cfg, fkv
+        self.offloaded = False
+
+    def init_state(self, batch, max_len, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        return {
+            "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.d_head), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.d_head), dtype),
+            "length": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def prefill(self, state, k, v, q_last):
+        B, T = k.shape[:2]
+        dt = state["k"].dtype
+        return dict(
+            state,
+            k=jax.lax.dynamic_update_slice(state["k"], k.astype(dt), (0, 0, 0, 0)),
+            v=jax.lax.dynamic_update_slice(state["v"], v.astype(dt), (0, 0, 0, 0)),
+            length=jnp.full((B,), T, jnp.int32))
+
+    def decode(self, state, q, k_new, v_new, q_proxy=None):
+        cfg = self.cfg
+        B, H, d = q.shape
+        kv = cfg.n_kv_heads
+        cur_pos = state["length"]
+        bidx = jnp.arange(B)
+        st = dict(state)
+        st["k"] = state["k"].at[bidx, cur_pos].set(k_new.astype(state["k"].dtype))
+        st["v"] = state["v"].at[bidx, cur_pos].set(v_new.astype(state["v"].dtype))
+        st["length"] = cur_pos + 1
+        L = st["k"].shape[1]
+        k_cat = st["k"].transpose(0, 2, 1, 3)
+        v_cat = st["v"].transpose(0, 2, 1, 3)
+        pos = jnp.broadcast_to(jnp.arange(L)[None, None, :], (B, kv, L))
+        pos = jnp.where(pos < st["length"][:, None, None], pos, -1)
+        o = _attend(cfg, q, k_cat, v_cat, pos, cur_pos)
+        info = {"corrected": jnp.zeros((B, kv), bool),
+                "sync_pages": jnp.zeros((B,), jnp.int32),
+                "async_pages": jnp.zeros((B,), jnp.int32),
+                "similarity": jnp.zeros((B, kv)), "granularity": "page"}
+        return o, st, info
+
+
+class RaaSRetriever:
+    """RaaS-like dynamic dropping: pages without recent significant attention
+    are evicted permanently (timestamp-based, budget-bounded, no pool)."""
+
+    def __init__(self, cfg, fkv):
+        self.cfg, self.fkv = cfg, fkv
+        self.offloaded = False
+
+    def init_state(self, batch, max_len, dtype=jnp.bfloat16):
+        cfg, fkv = self.cfg, self.fkv
+        kv, d, p = cfg.n_kv_heads, cfg.d_head, fkv.page_size
+        n_keep = max(1, (fkv.budget - fkv.n_sink - fkv.n_window) // p)
+        base = StreamingRetriever(cfg, fkv).init_state(batch, max_len, dtype)
+        base.update({
+            "keep_k": jnp.zeros((batch, kv, n_keep, p, d), dtype),
+            "keep_v": jnp.zeros((batch, kv, n_keep, p, d), dtype),
+            "keep_idx": jnp.full((batch, kv, n_keep), -1, jnp.int32),
+            "last_used": jnp.full((batch, kv, n_keep), -(10 ** 9), jnp.int32),
+        })
+        return base
+
+    def prefill(self, state, k, v, q_last):
+        cfg, fkv = self.cfg, self.fkv
+        p = fkv.page_size
+        B, T = k.shape[:2]
+        st = StreamingRetriever(cfg, fkv).prefill(state, k, v, q_last)
+        # seed kept pages with the top pages under the last query (like snapKV)
+        n_keep = state["keep_idx"].shape[2]
+        n_pages = T // p
+        kp = k[:, : n_pages * p].reshape(B, n_pages, p, cfg.n_kv_heads, cfg.d_head)
+        summ = jnp.stack([kp.min(2), kp.max(2)], axis=3)
+        length = jnp.full((B,), T, jnp.int32)
+        scores = selection.page_scores_minmax(q_last, summ, _scale(cfg))
+        valid = selection.selectable_mask(cfg, fkv, n_pages, length)
+        pooled = selection.group_consistent_scores(cfg, scores, valid,
+                                                   fkv.group_pool)
+        _, idx = jax.lax.top_k(pooled, n_keep)
+        idx = idx.astype(jnp.int32)
+        vp = v[:, : n_pages * p].reshape(B, n_pages, p, cfg.n_kv_heads, cfg.d_head)
+        pool = paging.nhd_pages_to_hnd(kp, vp)
+        kk, vv = recall.recall_pages(pool, idx)
+        return dict(st, keep_k=kk.astype(state["keep_k"].dtype),
+                    keep_v=vv.astype(state["keep_v"].dtype), keep_idx=idx,
+                    last_used=jnp.full_like(state["last_used"], T))
+
+    def decode(self, state, q, k_new, v_new, q_proxy=None):
+        cfg, fkv = self.cfg, self.fkv
+        p = fkv.page_size
+        B, H, d = q.shape
+        kv = cfg.n_kv_heads
+        cur_pos = state["length"]
+        stream = StreamingRetriever(cfg, fkv)
+        # attention over sink + window + kept pages
+        st = dict(state)
+        n_win = st["win_k"].shape[1]
+        slot = cur_pos % n_win
+        bidx = jnp.arange(B)
+        st["win_k"] = st["win_k"].at[bidx, slot].set(k_new.astype(st["win_k"].dtype))
+        st["win_v"] = st["win_v"].at[bidx, slot].set(v_new.astype(st["win_v"].dtype))
+        st["win_pos"] = st["win_pos"].at[bidx, slot].set(cur_pos)
+        st["length"] = cur_pos + 1
+        k_cat, v_cat, pos = _cat_regions(
+            fkv, {**st}, st["keep_k"], st["keep_v"], st["keep_idx"], p)
+        # need attention weights to update timestamps: recompute scores per page
+        o = _attend(cfg, q, k_cat, v_cat, pos, cur_pos)
+        # page-level attention mass for kept pages (group-mean, like selection)
+        n_keep = st["keep_idx"].shape[2]
+        G = cfg.group_size
+        qg = q.reshape(B, kv, G, d)
+        s = jnp.einsum("bkgd,bkld->bkgl", qg, k_cat).astype(jnp.float32) * _scale(cfg)
+        s = jnp.where((pos >= 0)[:, :, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        off = k_cat.shape[2] - n_keep * p
+        wp = w[..., off:].reshape(B, kv, G, n_keep, p).sum(-1).mean(2)
+        significant = wp > (1.0 / jnp.maximum(st["length"], 1))[:, None, None]
+        last_used = jnp.where(significant & (st["keep_idx"] >= 0),
+                              st["length"][:, None, None], st["last_used"])
+        # when a page completes, insert it by evicting the stalest kept page
+        page_done = (st["length"] % p) == 0
+        page_idx = st["length"] // p - 1
+        tok_pos = page_idx[:, None] * p + jnp.arange(p)[None, :]
+        tok_slot = tok_pos % n_win
+        pk = jnp.take_along_axis(st["win_k"], tok_slot[:, :, None, None], axis=1)
+        pv = jnp.take_along_axis(st["win_v"], tok_slot[:, :, None, None], axis=1)
+        evict = jnp.argmin(last_used, axis=2)                      # (B,kv)
+        kI = jnp.arange(kv)[None, :]
+        bI = bidx[:, None]
+        sel = page_done[:, None, None, None]
+        newp_k = pk.transpose(0, 2, 1, 3)                          # (B,kv,p,d)
+        newp_v = pv.transpose(0, 2, 1, 3)
+        keep_k = st["keep_k"].at[bI, kI, evict].set(
+            jnp.where(sel, newp_k, st["keep_k"][bI, kI, evict]))
+        keep_v = st["keep_v"].at[bI, kI, evict].set(
+            jnp.where(sel, newp_v, st["keep_v"][bI, kI, evict]))
+        keep_idx = st["keep_idx"].at[bI, kI, evict].set(
+            jnp.where(page_done[:, None], page_idx[:, None],
+                      st["keep_idx"][bI, kI, evict]).astype(jnp.int32))
+        last_used = last_used.at[bI, kI, evict].set(
+            jnp.where(page_done[:, None], st["length"][:, None],
+                      last_used[bI, kI, evict]))
+        st.update(keep_k=keep_k, keep_v=keep_v, keep_idx=keep_idx,
+                  last_used=last_used)
+        info = {"corrected": jnp.zeros((B, kv), bool),
+                "sync_pages": jnp.zeros((B,), jnp.int32),
+                "async_pages": jnp.zeros((B,), jnp.int32),
+                "similarity": jnp.zeros((B, kv)), "granularity": "page"}
+        return o, st, info
+
+
+class ShadowKVRetriever(FreeKVRetriever):
+    """ShadowKV-like: rank-r key representation resident on device (keys are
+    reconstructed, not transferred); only V pages are recalled from the pool.
+    SVD is computed at prefill (the paper notes ShadowKV does not natively
+    support long generation; decoded tokens here stay in the window/sink or are
+    recalled normally)."""
+
+    def __init__(self, cfg, fkv):
+        super().__init__(cfg, fkv, speculative=False)
+        self.rank = min(fkv.svd_rank, cfg.d_head)
+
+    def init_state(self, batch, max_len, dtype=jnp.bfloat16):
+        st = super().init_state(batch, max_len, dtype)
+        cfg = self.cfg
+        n_pages = st["pool"].shape[1]
+        p = self.fkv.page_size
+        st["k_u"] = jnp.zeros((batch, cfg.n_kv_heads, n_pages * p, self.rank),
+                              dtype)
+        st["k_w"] = jnp.zeros((batch, cfg.n_kv_heads, self.rank, cfg.d_head),
+                              dtype)
+        return st
+
+    def prefill(self, state, k, v, q_last):
+        st = super().prefill(state, k, v, q_last)
+        B, T, kv, d = k.shape
+        kf = k.transpose(0, 2, 1, 3).astype(jnp.float32)           # (B,kv,T,d)
+        u, s, vt = jnp.linalg.svd(kf, full_matrices=False)
+        r = self.rank
+        ur = u[..., :r] * s[..., None, :r]                         # (B,kv,T,r)
+        wr = vt[..., :r, :]                                        # (B,kv,r,d)
+        k_u = jax.lax.dynamic_update_slice(
+            st["k_u"], ur.astype(st["k_u"].dtype), (0, 0, 0, 0))
+        return dict(st, k_u=k_u, k_w=wr.astype(st["k_w"].dtype))
+
+    def decode(self, state, q, k_new, v_new, q_proxy=None):
+        cfg, fkv = self.cfg, self.fkv
+        p = fkv.page_size
+        B, H, d = q.shape
+        kv = cfg.n_kv_heads
+        cur_pos = state["length"]
+        state = paging.append_token(state, k_new, v_new)
+        n_sel = self._n_sel(state)
+        idx, _ = selection.select_pages(
+            cfg, fkv, q, state["summ"], state["length"], n_sel)
+        # keys: reconstruct selected pages from the low-rank factors
+        safe = jnp.clip(idx, 0, state["pool"].shape[1] - 1)
+        tok = safe[..., None] * p + jnp.arange(p)[None, None, None, :]
+        bI = jnp.arange(B)[:, None, None, None]
+        kI = jnp.arange(kv)[None, :, None, None]
+        u_sel = state["k_u"][bI, kI, tok]                          # (B,kv,n_sel,p,r)
+        k_rec = jnp.einsum("bkspr,bkrd->bkspd", u_sel.astype(jnp.float32),
+                           state["k_w"].astype(jnp.float32))
+        k_rec = jnp.where((idx >= 0)[..., None, None], k_rec, 0).astype(q.dtype)
+        # values: genuine recall (V half only — ShadowKV's saving)
+        v_sel = recall.recall_values_only(state["pool"], idx).astype(q.dtype)
+        k_cat, v_cat, pos = _cat_regions(fkv, state, k_rec, v_sel, idx, p)
+        o = _attend(cfg, q, k_cat, v_cat, pos, cur_pos)
+        state = dict(state, sel_idx=idx, qprev=q.astype(state["qprev"].dtype))
+        info = {"corrected": jnp.ones((B, kv), bool),
+                "sync_pages": jnp.sum(idx >= 0, axis=(1, 2)) // 2,  # V-only
+                "async_pages": jnp.zeros((B,), jnp.int32),
+                "similarity": jnp.zeros((B, kv)), "granularity": "page"}
+        return o, state, info
+
+
+METHODS = ("freekv", "arkvale", "infinigen", "quest", "shadowkv", "raas",
+           "streaming", "full")
+
+
+def make_retriever(cfg: ArchConfig, fkv: FreeKVConfig, mesh=None):
+    m = fkv.method
+    if m == "freekv":
+        return FreeKVRetriever(cfg, fkv, speculative=True, mesh=mesh)
+    if m == "arkvale":
+        return FreeKVRetriever(cfg, fkv, speculative=False, mesh=mesh)
+    if m == "infinigen":
+        return FreeKVRetriever(cfg, fkv, speculative=False, proxy_query=True,
+                               token_wise_recall=True, mesh=mesh)
+    if m == "quest":
+        return QuestRetriever(cfg, fkv)
+    if m == "shadowkv":
+        return ShadowKVRetriever(cfg, fkv)
+    if m == "raas":
+        return RaaSRetriever(cfg, fkv)
+    if m == "streaming":
+        return StreamingRetriever(cfg, fkv, window=fkv.budget - fkv.n_sink)
+    if m == "full":
+        return FullRetriever(cfg, fkv)
+    raise ValueError(f"unknown method {m!r}")

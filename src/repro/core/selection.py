@@ -1,0 +1,130 @@
+"""Page selection (§3.2): Quest-style min-max scoring over page summaries +
+group-consistent pooling. The paper's choice is **MeanS** — mean pooling across
+the GQA group over softmax(page attention weights) (App. B.2); the alternatives
+are implemented for the ablation benchmark.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, FreeKVConfig
+
+NEG_INF = -1e30
+
+
+def page_scores_minmax(q, summ, scale):
+    """Quest upper-bound score per (q-head, page).
+
+    q:    (B, H, d)
+    summ: (B, n_pages, kv, 2, d)  (min, max) pooled keys
+    Returns (B, H, n_pages) fp32.
+    """
+    B, H, d = q.shape
+    kv = summ.shape[2]
+    G = H // kv
+    qg = q.reshape(B, kv, G, d).astype(jnp.float32)
+    lo = summ[..., 0, :].astype(jnp.float32)     # (B,n,kv,d)
+    hi = summ[..., 1, :].astype(jnp.float32)
+    # sum_d max(q_d*lo_d, q_d*hi_d) == relu(q) @ hi + min(q, 0) @ lo
+    # (exact since lo <= hi coordinate-wise) -> two MXU matmuls, no (n,d)
+    # elementwise intermediate
+    s = (jnp.einsum("bkgd,bnkd->bkgn", jnp.maximum(qg, 0), hi)
+         + jnp.einsum("bkgd,bnkd->bkgn", jnp.minimum(qg, 0), lo)) * scale
+    return s.reshape(B, H, -1)
+
+
+def selectable_mask(cfg: ArchConfig, fkv: FreeKVConfig, n_pages, length):
+    """Pages eligible for selection: fully offloaded, not sink, not inside the
+    local window (those tokens are device-resident already)."""
+    p = fkv.page_size
+    pages = jnp.arange(n_pages)
+    first = fkv.n_sink // p                      # sink pages resident
+    n_done = length // p                         # fully offloaded pages (B,)
+    last = jnp.maximum(first, (length - fkv.n_window) // p)  # window boundary
+    return (pages[None, :] >= first) & (pages[None, :] < jnp.minimum(
+        n_done, last)[:, None])                  # (B, n_pages)
+
+
+def group_consistent_scores(cfg: ArchConfig, scores, valid, mode="mean_softmax"):
+    """(B, H, n_pages) per-q-head scores -> (B, kv, n_pages) group-consistent.
+
+    modes: mean_softmax (MeanS, paper) | max_softmax | mean_qk | max_qk
+    (the q-pooling variants MaxQ/MeanQ pool q before scoring — see
+    ``select_pages``'s q_pool argument).
+    """
+    B, H, n = scores.shape
+    kv = cfg.n_kv_heads
+    G = H // kv
+    s = scores.reshape(B, kv, G, n)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    if mode.endswith("softmax"):
+        s = jax.nn.softmax(s, axis=-1)
+    if mode.startswith("mean"):
+        pooled = s.mean(axis=2)
+    else:
+        pooled = s.max(axis=2)
+    return jnp.where(valid[:, None, :], pooled, NEG_INF)
+
+
+def select_pages(cfg: ArchConfig, fkv: FreeKVConfig, q, summ, length, n_sel,
+                 q_pool=None):
+    """Full selection: scores -> group-consistent pooling -> top-k page ids.
+
+    Returns (idx (B, kv, n_sel) int32 with -1 for invalid, scores_pooled).
+    """
+    B, H, d = q.shape
+    scale = cfg.attn_scale if cfg.attn_scale is not None else 1.0 / (d ** 0.5)
+    if q_pool in ("max", "mean"):                # MaxQ / MeanQ ablations
+        kv = cfg.n_kv_heads
+        qg = q.reshape(B, kv, H // kv, d)
+        qp = qg.max(axis=2) if q_pool == "max" else qg.mean(axis=2)
+        q = jnp.repeat(qp, H // kv, axis=1)
+    if fkv.use_kernels:
+        from repro.kernels import ops
+        kv = cfg.n_kv_heads
+        scores = ops.page_scores(
+            q.reshape(B, kv, H // kv, d), summ, scale=scale
+        ).reshape(B, H, -1)
+    else:
+        scores = page_scores_minmax(q, summ, scale)              # (B,H,n)
+    valid = selectable_mask(cfg, fkv, summ.shape[1], length)     # (B,n)
+    pooled = group_consistent_scores(cfg, scores, valid, fkv.group_pool)
+    k = min(n_sel, pooled.shape[-1])
+    top_s, top_i = jax.lax.top_k(pooled, k)                      # (B,kv,k)
+    idx = jnp.where(top_s > NEG_INF / 2, top_i, -1).astype(jnp.int32)
+    if 0.0 < fkv.select_top_p < 1.0 and fkv.group_pool.endswith("softmax"):
+        # dynamic budget (paper §6 / Twilight-style): pooled scores are a
+        # probability distribution over pages under the *S pooling modes;
+        # keep the smallest prefix reaching top_p mass (always >= 1 page)
+        mass = jnp.cumsum(jnp.maximum(top_s, 0.0), axis=-1)
+        keep = (mass - jnp.maximum(top_s, 0.0)) < fkv.select_top_p
+        keep = keep.at[..., 0].set(True)
+        idx = jnp.where(keep, idx, -1)
+    if k < n_sel:
+        pad = jnp.full(idx.shape[:-1] + (n_sel - k,), -1, jnp.int32)
+        idx = jnp.concatenate([idx, pad], axis=-1)
+    return idx, pooled
+
+
+def oracle_pages(cfg: ArchConfig, fkv: FreeKVConfig, q, k_full, length, n_sel):
+    """Oracle top-k pages from *exact* attention weights (tests/benchmarks).
+
+    q: (B,H,d); k_full: (B,T,kv,d) post-rope keys. Returns (B,kv,n_sel)."""
+    B, H, d = q.shape
+    T = k_full.shape[1]
+    p = fkv.page_size
+    kv = cfg.n_kv_heads
+    scale = cfg.attn_scale if cfg.attn_scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(B, kv, H // kv, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_full.astype(jnp.float32)) * scale
+    tok_valid = jnp.arange(T)[None, :] < length[:, None]
+    s = jnp.where(tok_valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    n_pages = T // p
+    wp = w[..., : n_pages * p].reshape(B, kv, H // kv, n_pages, p).sum(-1)
+    pooled = wp.mean(axis=2)                                     # (B,kv,n_pages)
+    valid = selectable_mask(cfg, fkv, n_pages, length)
+    pooled = jnp.where(valid[:, None, :], pooled, NEG_INF)
+    _, top_i = jax.lax.top_k(pooled, n_sel)
+    return top_i.astype(jnp.int32)

@@ -1,0 +1,101 @@
+"""Pallas kernel: flash attention for the 32K prefill path (GQA, causal,
+optional sliding window + logit softcap).
+
+Grid (B, H, Tq/blq, Tk/blk); K/V index maps fold the GQA group (head h reads
+KV head h // G). Running (m, l, acc) scratch in VMEM; fully-masked KV blocks
+are skipped with pl.when (causal upper triangle and out-of-window blocks),
+which halves the causal work versus mask-only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, softcap, window, blq, blk, n_kb, causal):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = iq * blq
+    k_lo = ik * blk
+    # block-level skip: fully above the diagonal, or fully left of the window
+    run = True
+    if causal:
+        run = k_lo <= q_lo + blq - 1
+    if window is not None:
+        run = jnp.logical_and(run, k_lo + blk - 1 > q_lo - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # (blq, d)
+        k = k_ref[0, 0].astype(jnp.float32)        # (blk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        tq = q_lo + jax.lax.broadcasted_iota(jnp.int32, (blq, blk), 0)
+        tk = k_lo + jax.lax.broadcasted_iota(jnp.int32, (blq, blk), 1)
+        ok = jnp.ones((blq, blk), bool)
+        if causal:
+            ok &= tk <= tq
+        if window is not None:
+            ok &= tk > tq - window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+        m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev[:, 0] - m_new)
+        pexp = jnp.exp(s - m_new[:, None])
+        l_ref[...] = (l_prev[:, 0] * alpha + jnp.sum(pexp, axis=1))[:, None]
+        acc_ref[...] = acc_prev * alpha[:, None] + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new[:, None]
+
+    @pl.when(ik == n_kb - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_prefill(q, k, v, *, scale, causal=True, window=None, softcap=None,
+                  blq=128, blk=128, interpret=True):
+    """q (B, H, T, d); k/v (B, kv, T, d) -> (B, H, T, d)."""
+    B, H, T, d = q.shape
+    kv = k.shape[1]
+    G = H // kv
+    blq, blk = min(blq, T), min(blk, T)
+    assert T % blq == 0 and T % blk == 0
+    n_kb = T // blk
+    kern = functools.partial(_kernel, scale=scale, softcap=softcap,
+                             window=window, blq=blq, blk=blk, n_kb=n_kb,
+                             causal=causal)
+    return pl.pallas_call(
+        kern,
+        grid=(B, H, T // blq, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, 1, blq, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, blk, d), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, blk, d), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blq, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blq, 1), jnp.float32),
+            pltpu.VMEM((blq, 1), jnp.float32),
+            pltpu.VMEM((blq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,66 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU, where
+the kernels lower through Mosaic. The wrappers are the only entry points the
+rest of the framework uses.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_prefill import flash_prefill as _flash
+from repro.kernels.page_scores import page_scores as _scores
+from repro.kernels.page_summary import page_summary as _summary
+from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.recall_gather import recall_gather as _recall
+
+
+def _default_interpret():
+    return jax.default_backend() == "cpu"
+
+
+def paged_attention(q, k_pages, v_pages, page_pos, cur_pos, *, scale,
+                    softcap=None, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _paged(q, k_pages, v_pages, page_pos, cur_pos, scale=scale,
+                  softcap=softcap, interpret=interpret)
+
+
+def page_summary(k, *, page_size, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _summary(k, page_size=page_size, interpret=interpret)
+
+
+def page_scores(q, summ, *, scale, block_pages=128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    N = summ.shape[1]
+    bp = block_pages
+    while N % bp:
+        bp //= 2
+    return _scores(q, summ, scale=scale, block_pages=max(bp, 1),
+                   interpret=interpret)
+
+
+def recall_gather(pool, idx, *, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _recall(pool, idx, interpret=interpret)
+
+
+def flash_prefill(q, k, v, *, scale, causal=True, window=None, softcap=None,
+                  interpret=None, blq=128, blk=128):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash(q, k, v, scale=scale, causal=causal, window=window,
+                  softcap=softcap, blq=blq, blk=blk, interpret=interpret)
+
+
+REFS = {
+    "paged_attention": ref.paged_attention_ref,
+    "page_summary": ref.page_summary_ref,
+    "page_scores": ref.page_scores_ref,
+    "recall_gather": ref.recall_gather_ref,
+    "flash_prefill": ref.flash_prefill_ref,
+}

@@ -1,0 +1,48 @@
+"""Pallas kernel: Quest min-max page scoring for selection (§3.2).
+
+score[g, n] = scale * sum_d max(q[g,d] * lo[n,d], q[g,d] * hi[n,d])
+
+Grid tiles the page axis in blocks of 128 (lane-aligned); q's GQA group rides
+the sublane dim. This runs off the critical path under speculative retrieval
+but on it for corrected heads, so it is a genuine hot spot at 16K+ pages.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, lo_ref, hi_ref, o_ref, *, scale):
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, d)
+    lo = lo_ref[0, :, 0].astype(jnp.float32)       # (NB, d)
+    hi = hi_ref[0, :, 0].astype(jnp.float32)
+    # sum_d max(q*lo, q*hi) == relu(q) @ hi^T + min(q,0) @ lo^T  (lo <= hi)
+    dot = lambda a, b: jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    s = dot(jnp.maximum(q, 0), hi) + dot(jnp.minimum(q, 0), lo)
+    o_ref[0, 0] = (s * scale).astype(o_ref.dtype)
+
+
+def page_scores(q, summ, *, scale, block_pages=128, interpret=True):
+    """q (B, kv, G, d); summ (B, n_pages, kv, 2, d) -> (B, kv, G, n_pages) f32."""
+    B, kv, G, d = q.shape
+    N = summ.shape[1]
+    NB = min(block_pages, N)
+    assert N % NB == 0, (N, NB)
+    lo, hi = summ[..., 0, :], summ[..., 1, :]      # (B, N, kv, d)
+    kern = functools.partial(_kernel, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(B, kv, N // NB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, d), lambda b, k, j: (b, k, 0, 0)),
+            pl.BlockSpec((1, NB, 1, d), lambda b, k, j: (b, j, k, 0)),
+            pl.BlockSpec((1, NB, 1, d), lambda b, k, j: (b, j, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, NB), lambda b, k, j: (b, k, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, kv, G, N), jnp.float32),
+        interpret=interpret,
+    )(q, lo, hi)

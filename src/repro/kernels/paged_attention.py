@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: decode attention over per-KV-head selected pages.
+
+This is FreeKV's decode hot spot: one query token per request attends to the
+budget-resident pages (sink + window + speculatively recalled), laid out NHD
+(page-major (p, d) blocks). Flash-style online softmax over a page-grid:
+
+  grid = (B, kv, N_pages); each step loads one (p, d) K page and V page into
+  VMEM, updates running (m, l, acc) scratch for all G group queries, and the
+  final step writes acc/l. Pallas pipelines the (b, kv, n) grid, so page n+1's
+  HBM->VMEM DMA overlaps page n's compute — the on-chip mirror of the paper's
+  double-buffered streamed recall.
+
+Tiling: p=32 x d=128 blocks are MXU/lane aligned; G (GQA group) rides in the
+sublane dimension of the q block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, cur_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale, softcap, n_pages):
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, d)
+    k = k_ref[0, 0, 0].astype(jnp.float32)         # (p, d)
+    v = v_ref[0, 0, 0].astype(jnp.float32)         # (p, d)
+    pos = pos_ref[0, 0, 0]                         # (p,) int32
+    cur = cur_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (G,p)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    ok = (pos >= 0) & (pos <= cur)
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_cur = jnp.max(s, axis=1)                     # (G,)
+    m_new = jnp.maximum(m_prev[:, 0], m_cur)
+    alpha = jnp.exp(m_prev[:, 0] - m_new)
+    pexp = jnp.exp(s - m_new[:, None])             # (G, p)
+    l_new = l_prev[:, 0] * alpha + jnp.sum(pexp, axis=1)
+    acc_new = acc_prev * alpha[:, None] + jax.lax.dot_general(
+        pexp, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new[:, None]
+    l_ref[...] = l_new[:, None]
+    acc_ref[...] = acc_new
+
+    @pl.when(n == n_pages - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, page_pos, cur_pos, *, scale,
+                    softcap=None, interpret=True):
+    """q (B,kv,G,d); k/v_pages (B,kv,N,p,d); page_pos (B,kv,N,p);
+    cur_pos (B,) -> (B,kv,G,d)."""
+    B, kv, G, d = q.shape
+    N, p = k_pages.shape[2], k_pages.shape[3]
+    grid = (B, kv, N)
+    kern = functools.partial(_kernel, scale=scale, softcap=softcap, n_pages=N)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, d), lambda b, k, n: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, 1, p, d), lambda b, k, n: (b, k, n, 0, 0)),
+            pl.BlockSpec((1, 1, 1, p, d), lambda b, k, n: (b, k, n, 0, 0)),
+            pl.BlockSpec((1, 1, 1, p), lambda b, k, n: (b, k, n, 0)),
+            pl.BlockSpec((1,), lambda b, k, n: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, d), lambda b, k, n: (b, k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, kv, G, d), q.dtype),
+        scratch_shapes=[
+            # (G,1) running max / denom + (G,d) accumulator, fp32 in VMEM
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_pages, v_pages, page_pos, cur_pos)

@@ -1,0 +1,54 @@
+"""Pallas kernel: double-buffered streamed recall (§4.2, TPU adaptation).
+
+Gathers the selected KV pages out of the HND pool into NHD device buffers.
+The page index feeding each grid step's BlockSpec comes from a SCALAR-PREFETCH
+operand (the selected page ids), so the pipeline's DMA engine fetches page
+n+1's (2, p, d) HND block from (host-mapped) HBM while page n's layout
+conversion/store executes — Pallas' automatic grid pipelining IS the paper's
+two staging buffers (double buffering), expressed TPU-natively.
+
+The 16 KiB contiguous (2*p*d, bf16) transfer unit is the paper's maximal-unit
+argument verbatim: the HND pool keeps each (kv-head, page) block contiguous.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, pool_ref, k_ref, v_ref):
+    b, h, n = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    valid = idx_ref[b, h, n] >= 0
+    blk = pool_ref[0, 0, 0]                       # (2, p, d) HND block
+    zero = jnp.zeros_like(blk[0])
+    k_ref[0, 0, 0] = jnp.where(valid, blk[0], zero)   # NHD (p, d) halves
+    v_ref[0, 0, 0] = jnp.where(valid, blk[1], zero)
+
+
+def recall_gather(pool, idx, *, interpret=True):
+    """pool (B, n_pages, kv, 2, p, d) HND; idx (B, kv, n_sel) int32 (-1 pad)
+    -> (k, v) each (B, kv, n_sel, p, d)."""
+    B, n_pages, kv, _, p, d = pool.shape
+    n_sel = idx.shape[2]
+
+    def pool_map(b, h, n, idx_ref):
+        page = jnp.clip(idx_ref[b, h, n], 0, n_pages - 1)
+        return (b, page, h, 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, kv, n_sel),
+        in_specs=[pl.BlockSpec((1, 1, 1, 2, p, d), pool_map)],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, p, d), lambda b, h, n, idx_ref: (b, h, n, 0, 0)),
+            pl.BlockSpec((1, 1, 1, p, d), lambda b, h, n, idx_ref: (b, h, n, 0, 0)),
+        ],
+    )
+    out_shape = [jax.ShapeDtypeStruct((B, kv, n_sel, p, d), pool.dtype),
+                 jax.ShapeDtypeStruct((B, kv, n_sel, p, d), pool.dtype)]
+    k, v = pl.pallas_call(
+        _kernel, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret,
+    )(idx, pool)
+    return k, v

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def page_summary_ref(k_pages):
+    """k_pages (B, n_pages, p, kv, d) -> (B, n_pages, kv, 2, d) min/max."""
+    lo = k_pages.min(axis=2)
+    hi = k_pages.max(axis=2)
+    return jnp.stack([lo, hi], axis=3)
+
+
+def page_scores_ref(q, summ, scale):
+    """q (B, kv, G, d); summ (B, n_pages, kv, 2, d) -> (B, kv, G, n_pages).
+
+    Quest scoring: sum_d max(q*min, q*max) == max of the two inner products
+    taken coordinate-wise BEFORE the sum; note this is sum(max(q*lo, q*hi)),
+    not max(q@lo, q@hi)."""
+    lo = summ[..., 0, :].astype(jnp.float32)      # (B,n,kv,d)
+    hi = summ[..., 1, :].astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    e_lo = qf[:, :, :, None, :] * lo.transpose(0, 2, 1, 3)[:, :, None]
+    e_hi = qf[:, :, :, None, :] * hi.transpose(0, 2, 1, 3)[:, :, None]
+    return jnp.maximum(e_lo, e_hi).sum(-1) * scale
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_pos, cur_pos, scale,
+                        softcap=None):
+    """Decode attention over per-KV-head page sets.
+
+    q        (B, kv, G, d)
+    k/v_pages(B, kv, N, p, d)
+    page_pos (B, kv, N, p) int32, -1 = masked
+    cur_pos  (B,) int32
+    -> (B, kv, G, d)
+    """
+    B, kv, N, p, d = k_pages.shape
+    k = k_pages.reshape(B, kv, N * p, d)
+    v = v_pages.reshape(B, kv, N * p, d)
+    pos = page_pos.reshape(B, kv, N * p)
+    s = jnp.einsum("bkgd,bkld->bkgl", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    ok = (pos >= 0) & (pos <= cur_pos[:, None, None])
+    s = jnp.where(ok[:, :, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgl,bkld->bkgd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def recall_gather_ref(pool, idx):
+    """pool (B, n_pages, kv, 2, p, d) HND; idx (B, kv, n_sel)
+    -> k, v (B, kv, n_sel, p, d)."""
+    B, n_pages, kv, _, p, d = pool.shape
+    safe = jnp.clip(idx, 0, n_pages - 1)
+    bI = jnp.arange(B)[:, None, None]
+    kI = jnp.arange(kv)[None, :, None]
+    blk = pool[bI, safe, kI]
+    blk = jnp.where((idx >= 0)[..., None, None, None], blk, 0)
+    return blk[..., 0, :, :], blk[..., 1, :, :]
+
+
+def flash_prefill_ref(q, k, v, scale, causal=True, window=None):
+    """q (B, H, T, d); k/v (B, kv, T, d) -> (B, H, T, d)."""
+    B, H, T, d = q.shape
+    kv = k.shape[1]
+    G = H // kv
+    qg = q.reshape(B, kv, G, T, d).astype(jnp.float32)
+    s = jnp.einsum("bkgtd,bksd->bkgts", qg, k.astype(jnp.float32)) * scale
+    ti = jnp.arange(T)
+    ok = jnp.ones((T, T), bool)
+    if causal:
+        ok &= ti[None, :] <= ti[:, None]
+    if window is not None:
+        ok &= ti[None, :] > ti[:, None] - window
+    s = jnp.where(ok, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bksd->bkgtd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, T, d).astype(q.dtype)

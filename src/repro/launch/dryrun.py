@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax import: jax locks the device count at first init.
+# The 512 placeholder host devices exist ONLY for this dry-run; tests and
+# benchmarks see the real single CPU device.
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, ASSIGNED, SHAPES
+from repro.configs.base import ArchConfig, FreeKVConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo_cost, roofline as rl
+from repro.models.model import (init_params, prefill, serve_step,
+                                init_decode_state)
+from repro.sharding import rules
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train_step import make_train_step
+
+PARAM_DTYPE = jnp.bfloat16
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def dryrun_fkv(page_size=32) -> FreeKVConfig:
+    # paper's long-generation serving configuration (Sec. 5.3)
+    return FreeKVConfig(method="freekv", page_size=page_size, budget=2048,
+                        n_sink=512, n_window=512, tau=0.9,
+                        pool_pad_pages=512)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, T = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.mode in ("train", "prefill"):
+        batch = {"tokens": sds((B, T), jnp.int32)}
+        if cfg.frontend is not None:
+            batch["frontend"] = sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                    PARAM_DTYPE)
+        return batch
+    return {"tokens": sds((B, 1), jnp.int32)}
+
+
+def _opt_cfg(cfg: ArchConfig) -> AdamWConfig:
+    # bf16 optimizer state for >50B-param archs so a single pod fits (DESIGN.md)
+    big = cfg.param_counts()["total"] > 5e10
+    return AdamWConfig(state_dtype="bfloat16" if big else "float32")
+
+
+def _with_periods(cfg: ArchConfig, n: int) -> ArchConfig:
+    return dataclasses.replace(
+        cfg, n_layers=len(cfg.prelude) + len(cfg.pattern) * n, n_periods=n)
+
+
+def _build(cfg: ArchConfig, shape: ShapeConfig, mesh, fkv: FreeKVConfig,
+           infer_weight_layout: bool = False):
+    """Returns (jitted_fn, example_args) for one (cfg, shape, mesh).
+
+    ``infer_weight_layout``: store weights model-sharded only (no FSDP dim)
+    for inference shapes when they fit — §Perf optimization 1."""
+    params_shape = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), PARAM_DTYPE))
+    fsdp = True
+    if infer_weight_layout and shape.mode != "train":
+        fsdp = rules.inference_fsdp(cfg, mesh)
+    p_sh = rules.param_shardings(cfg, mesh, params_shape, fsdp_shard=fsdp)
+    batch = input_specs(cfg, shape)
+    if shape.mode == "train":
+        opt_cfg = _opt_cfg(cfg)
+        opt_shape = jax.eval_shape(lambda p: adamw_init(p, opt_cfg),
+                                   params_shape)
+        opt_sh = {"m": p_sh, "v": p_sh, "step": NamedSharding(mesh, P())}
+        b_sh = rules.batch_shardings(cfg, mesh, batch)
+        step_fn = make_train_step(cfg, opt_cfg, mesh=mesh)
+        jf = jax.jit(step_fn, in_shardings=(p_sh, opt_sh, b_sh),
+                     out_shardings=(p_sh, opt_sh, None),
+                     donate_argnums=(0, 1))
+        return jf, (params_shape, opt_shape, batch)
+    if shape.mode == "prefill":
+        b_sh = rules.batch_shardings(cfg, mesh, batch)
+        state_shape = jax.eval_shape(
+            lambda: init_decode_state(cfg, fkv, shape.global_batch,
+                                      shape.seq_len + 64, PARAM_DTYPE))
+        st_sh = rules.decode_state_shardings(cfg, mesh, state_shape, fkv)
+
+        def pf(p, b):
+            return prefill(cfg, fkv, p, b, max_len=shape.seq_len + 64,
+                           mesh=mesh, state_dtype=PARAM_DTYPE)
+        jf = jax.jit(pf, in_shardings=(p_sh, b_sh), out_shardings=(None, st_sh))
+        return jf, (params_shape, batch)
+    # decode
+    state_shape = jax.eval_shape(
+        lambda: init_decode_state(cfg, fkv, shape.global_batch,
+                                  shape.seq_len + 64, PARAM_DTYPE))
+    st_sh = rules.decode_state_shardings(cfg, mesh, state_shape, fkv)
+    tok_sh = rules.batch_shardings(cfg, mesh, batch)
+
+    def step(p, s, t):
+        return serve_step(cfg, fkv, p, s, t["tokens"], mesh=mesh)
+    jf = jax.jit(step, in_shardings=(p_sh, st_sh, tok_sh),
+                 out_shardings=(None, st_sh), donate_argnums=(1,))
+    return jf, (params_shape, state_shape, batch)
+
+
+def _costs(compiled, n_devices):
+    ca = compiled.cost_analysis() or {}
+    coll = rl.collective_bytes_per_device(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": float(coll["total"]), "coll_detail": coll}
+
+
+def lower_case(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fkv = dryrun_fkv()
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(map(str, mesh.devices.shape)),
+           "n_devices": mesh.devices.size, "mode": shape.mode}
+
+    with mesh:
+        t0 = time.time()
+        jf, args = _build(cfg, shape, mesh, fkv)
+        lowered = jf.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        ma = compiled.memory_analysis()
+        per_dev = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                   + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "per_device_total": int(per_dev),
+            "fits_16GB": bool(per_dev < 16e9),
+        }
+        raw = _costs(compiled, mesh.devices.size)
+        rec["cost_raw_xla"] = {k: raw[k] for k in ("flops", "bytes", "coll")}
+
+        # XLA's cost model counts a while-loop body ONCE; the layer scan runs
+        # n_periods times and the time scans T/chunk times. Use the
+        # loop-aware HLO analyzer (launch/hlo_cost.py) instead.
+        hc = hlo_cost.analyze(compiled.as_text())
+        rec["cost"] = {
+            "flops_per_device": hc["flops"],
+            "bytes_accessed_per_device": hc["bytes"],
+            "collective_bytes_per_device": hc["coll"],
+        }
+        rec["collectives"] = {"total": hc["coll"],
+                              "per_op": hc["coll_per_op"]}
+        rec["top_comps"] = [
+            {"name": n, **{k: v for k, v in d.items()}}
+            for n, d in hlo_cost.top_computations(hc, "flops", 6)]
+        ext = hc
+
+        mem_bytes = ext["bytes"]
+        rec["cost"]["bytes_hlo_upper"] = ext["bytes"]
+        if shape.mode == "decode":
+            # decode HBM term: analytic (exact); the CPU-backend HLO wraps
+            # every bf16 buffer in f32 round trips (EXPERIMENTS §Method-notes)
+            mem_bytes = rl.analytic_decode_bytes(
+                cfg, fkv, shape, dict(mesh.shape), fsdp=True)
+            rec["cost"]["bytes_analytic"] = mem_bytes
+        terms = rl.roofline_terms(ext["flops"], mem_bytes, ext["coll"])
+        n_tokens = shape.global_batch * (shape.seq_len
+                                         if shape.mode != "decode" else 1)
+        mf = rl.model_flops(cfg, shape, n_tokens)
+        rec["roofline"] = {
+            "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s, "dominant": terms.dominant,
+            "model_flops_total": mf,
+            "hlo_flops_total": ext["flops"] * mesh.devices.size,
+            "useful_flops_ratio": (mf / (ext["flops"] * mesh.devices.size)
+                                   if ext["flops"] else 0.0),
+        }
+    return rec
+
+
+def run(archs, shapes, meshes, out_dir=ARTIFACT_DIR, skip_existing=True):
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                path = os.path.join(out_dir, tag + ".json")
+                if skip_existing and os.path.exists(path):
+                    print(f"[skip] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = lower_case(arch, shape, mp)
+                    rec["status"] = "ok"
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                    print(f"  ERROR: {e!r}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec.get("status") == "ok":
+                    r = rec.get("roofline", {})
+                    print(f"  ok lower={rec.get('lower_s')}s "
+                          f"compile={rec.get('compile_s')}s "
+                          f"mem/dev={rec['memory']['per_device_total']/1e9:.2f}GB "
+                          f"dominant={r.get('dominant')} "
+                          f"useful={r.get('useful_flops_ratio', 0):.3f}",
+                          flush=True)
+                results.append(rec)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    archs = list(ASSIGNED) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    run(archs, shapes, meshes, skip_existing=not args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,278 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+under-counts everything inside the layer scan (x n_periods) and the time scans
+(x T/chunk) by orders of magnitude. This module re-derives
+
+    flops            (dot/convolution ops, 2 * result_elems * contraction)
+    hbm bytes        (operands + results of scheduled top-level instructions)
+    collective bytes (all-gather / all-reduce / reduce-scatter / all-to-all /
+                      collective-permute, all-reduce charged 2x)
+
+from the compiled HLO text, multiplying every instruction by the product of
+trip counts of its enclosing while loops (trip count parsed from the loop
+condition's comparison constant). Bytes are only charged in *scheduled*
+computations (entry + loop bodies), not inside fusion subcomputations, which
+mirrors what the XLA cost model does for fused ops.
+
+It also returns a per-computation breakdown used by the §Perf iteration loop
+as the "profile".
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|\S+))\s+([\w\-]+)\(")
+_CALLEE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_BODY_COND = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_elems_bytes(type_str):
+    n_total, b_total = 0, 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        n_total += n
+        b_total += n * _DTYPE_BYTES[dt]
+    return n_total, b_total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    params: dict = field(default_factory=dict)   # name -> type str
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # symbol -> type str
+
+
+def parse_hlo(text: str):
+    comps = {}
+    cur = None
+    entry = None
+    for line in text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m:
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            # params: "a: f32[2,3], b: (s32[], f32[4])"
+            ptxt = m.group(2)
+            for pm in re.finditer(r"([\w.\-]+)\s*:\s*((?:\([^()]*\)|[^,()]+(?:\[[^\]]*\])?(?:\{[^}]*\})?))",
+                                  ptxt):
+                cur.params[pm.group(1)] = pm.group(2)
+                cur.shapes[pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        im = _INSTR.match(line)
+        if im:
+            ins = Instr(im.group(1), im.group(2), im.group(3), line.strip())
+            cur.instrs.append(ins)
+            cur.shapes[ins.name] = ins.type_str
+        if line.strip() == "}":
+            cur = None
+    return comps, entry
+
+
+def _trip_count(comps, caller: Computation, while_line: str,
+                cond_name: str) -> int:
+    """Loop trip count. Two cases:
+    (a) the bound is an inline constant in the condition computation;
+    (b) (grad-of-scan) the bound is a carried tuple element: resolve the
+        get-tuple-element index used by the condition's compare back through
+        the while's init tuple in the caller to a constant."""
+    cond = comps.get(cond_name)
+    best = 1
+    if cond is None:
+        return best
+    for ins in cond.instrs:
+        for c in re.finditer(r"constant\((\d+)\)", ins.line):
+            best = max(best, int(c.group(1)))
+    # dataflow path: GTE indices referenced in the condition
+    gte_idx = []
+    for ins in cond.instrs:
+        if ins.op == "get-tuple-element":
+            m = re.search(r"index=(\d+)", ins.line)
+            if m:
+                gte_idx.append(int(m.group(1)))
+    if not gte_idx:
+        return best
+    init_ops = _OPERANDS.findall(while_line.split("while(", 1)[1])
+    init_name = init_ops[0] if init_ops else None
+    tuple_line = next((i.line for i in caller.instrs
+                       if i.name == init_name and i.op == "tuple"), None)
+    if tuple_line is None:
+        return best
+    elems = _OPERANDS.findall(tuple_line.split("tuple(", 1)[1])
+    const_defs = {i.name: i.line for i in caller.instrs if i.op == "constant"}
+    for n in gte_idx:
+        if n < len(elems) and elems[n] in const_defs:
+            c = re.search(r"constant\((\d+)\)", const_defs[elems[n]])
+            if c:
+                best = max(best, int(c.group(1)))
+    return best
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    res_elems, _ = shape_elems_bytes(ins.type_str)
+    ops = _OPERANDS.findall(ins.line.split("(", 1)[1])
+    lhs = next((o for o in ops if o in comp.shapes), None)
+    contract = 1
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    if lhs is not None and cm and cm.group(1):
+        dims_m = _SHAPE_RE.search(comp.shapes[lhs])
+        if dims_m and dims_m.group(2):
+            dims = [int(x) for x in dims_m.group(2).split(",")]
+            for ci in cm.group(1).split(","):
+                ci = int(ci)
+                if ci < len(dims):
+                    contract *= dims[ci]
+    return 2.0 * res_elems * contract
+
+
+def _instr_bytes(comp: Computation, ins: Instr, comps=None) -> int:
+    if ins.op in ("parameter", "constant", "tuple", "get-tuple-element",
+                  "bitcast", "after-all"):
+        return 0
+    _, out_b = shape_elems_bytes(ins.type_str)
+    args = ins.line.split("(", 1)[1]
+    args = args.split("), ")[0]
+    op_bytes = []
+    for o in _OPERANDS.findall(args):
+        if o in comp.shapes:
+            _, b = shape_elems_bytes(comp.shapes[o])
+            op_bytes.append(b)
+    # slicing/update ops touch only the moved slice, not the whole buffer
+    # (XLA aliases the big operand in place); charging the full operand makes
+    # a paged-KV decode look like it re-reads the entire pool every step
+    if ins.op == "convert":
+        # dtype-only round trips are CPU-backend artifacts (no native bf16):
+        # the TPU target does not materialize them — excluded from the
+        # roofline's HBM-bytes term (documented in EXPERIMENTS.md)
+        return 0
+    if ins.op in ("gather", "dynamic-slice"):
+        return 2 * out_b
+    if ins.op in ("dynamic-update-slice", "scatter"):
+        # operands = (big buffer, update, indices): charge 2x the update
+        big = max(op_bytes) if op_bytes else out_b
+        others = [b for b in op_bytes if b != big]
+        upd = max(others) if others else out_b
+        return 2 * upd
+    if ins.op == "fusion" and comps is not None:
+        # in-place-update fusions (containing DUS/scatter, possibly wrapped
+        # in CPU-backend dtype converts) alias their big operand: charge the
+        # delta, not the whole buffer
+        cm = re.search(r"calls=%?([\w.\-]+)", ins.line)
+        callee = comps.get(cm.group(1)) if cm else None
+        if callee is not None and callee.instrs and any(
+                i.op in ("dynamic-update-slice", "scatter")
+                for i in callee.instrs):
+            big = max(op_bytes) if op_bytes else 0
+            return max(out_b + sum(op_bytes) - 2 * big, 0)
+    return out_b + sum(op_bytes)
+
+
+def analyze(text: str):
+    comps, entry = parse_hlo(text)
+    # build multipliers by BFS from entry
+    mult = defaultdict(float)
+    scheduled = defaultdict(bool)
+    mult[entry] = 1.0
+    scheduled[entry] = True
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            bc = _BODY_COND.search(ins.line)
+            if ins.op == "while" and bc:
+                cond_name, body_name = bc.group(1), bc.group(2)
+                trips = _trip_count(comps, comp, ins.line, cond_name)
+                mult[body_name] += mult[cname] * trips
+                scheduled[body_name] |= scheduled[cname]
+                for nm in (body_name, cond_name):
+                    if nm not in seen:
+                        seen.add(nm)
+                        order.append(nm)
+            else:
+                for cal in _CALLEE.finditer(ins.line):
+                    nm = cal.group(1)
+                    mult[nm] += mult[cname]
+                    # fusion/reduce callees are not scheduled (no HBM traffic)
+                    if nm not in seen:
+                        seen.add(nm)
+                        order.append(nm)
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll_bytes = 0.0
+    coll_per_op = defaultdict(float)
+    per_comp = {}
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        c_fl = c_by = c_co = 0.0
+        for ins in comp.instrs:
+            if ins.op in ("dot", "convolution"):
+                c_fl += _dot_flops(comp, ins)
+            if ins.op.startswith(COLLECTIVES):
+                base = ins.op
+                for c in COLLECTIVES:
+                    if ins.op.startswith(c):
+                        base = c
+                if ins.op.endswith("-done"):
+                    continue
+                _, b = shape_elems_bytes(ins.type_str)
+                charged = 2 * b if base == "all-reduce" else b
+                c_co += charged
+                coll_per_op[base] += charged * m
+            if scheduled.get(cname):
+                c_by += _instr_bytes(comp, ins, comps)
+        flops += c_fl * m
+        if scheduled.get(cname):
+            hbm_bytes += c_by * m
+        coll_bytes += c_co * m
+        if c_fl or c_by or c_co:
+            per_comp[cname] = {"mult": m, "flops": c_fl * m,
+                               "bytes": c_by * m if scheduled.get(cname) else 0,
+                               "coll": c_co * m}
+    return {"flops": flops, "bytes": hbm_bytes, "coll": coll_bytes,
+            "coll_per_op": dict(coll_per_op), "per_comp": per_comp}
+
+
+def top_computations(result, key="flops", n=8):
+    items = sorted(result["per_comp"].items(), key=lambda kv: -kv[1][key])
+    return items[:n]

@@ -1,0 +1,158 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs_total   / (chips * PEAK_FLOPS)
+    memory term     = HLO_bytes_total   / (chips * HBM_BW)
+    collective term = collective_bytes  / (chips * ICI_BW)
+
+cost_analysis() reports the *per-device* partitioned module, so totals are
+per-device values x chips (the formulas then reduce to per-device / per-chip
+peaks). collective_bytes comes from parsing the partitioned HLO: we sum the
+result-shape bytes of every all-gather / all-to-all / collective-permute and
+2x the operand bytes of all-reduces (ring = reduce-scatter + all-gather),
+reduce-scatter counts operand bytes.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+# TPU v5e-class hardware constants (per assignment)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+
+
+def shape_bytes(shape_str: str) -> int:
+    """'bf16[128,2048]' or tuple '(f32[8], s32[8])' -> bytes."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str):
+    """Returns [(op, result_bytes, line_bytes_charged)] per collective op."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # paired with -start; count once
+        res_bytes = shape_bytes(m.group(1))
+        op = m.group(2)
+        charged = 2 * res_bytes if op == "all-reduce" else res_bytes
+        out.append((op, res_bytes, charged))
+    return out
+
+
+def collective_bytes_per_device(hlo_text: str) -> dict:
+    per_op = {}
+    total = 0
+    for op, _, charged in parse_collectives(hlo_text):
+        per_op[op] = per_op.get(op, 0) + charged
+        total += charged
+    return {"total": total, "per_op": per_op,
+            "count": len(parse_collectives(hlo_text))}
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        vals = {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+        return max(vals, key=vals.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> Roofline:
+    return Roofline(compute_s=flops_per_dev / PEAK_FLOPS,
+                    memory_s=bytes_per_dev / HBM_BW,
+                    collective_s=coll_bytes_per_dev / ICI_BW)
+
+
+def analytic_decode_bytes(cfg, fkv, shape, mesh_shape, fsdp=True) -> float:
+    """Exact per-device HBM bytes for one decode step (napkin model):
+    weight reads + budget-KV reads (per KV head) + page append + recall reads
+    + recurrent-state read/write. Used as the decode memory term because the
+    CPU-backend HLO inflates bf16 buffers with f32 round-trips (see
+    EXPERIMENTS.md §Method-notes)."""
+    import math
+    axes = dict(mesh_shape)
+    mp = axes.get("model", 1)
+    nb = axes.get("data", 1) * axes.get("pod", 1)
+    n_dev = mp * nb
+    B = shape.global_batch
+    B_loc = max(1, B // nb) if B % nb == 0 else B
+    it = 2  # bf16
+    pc = cfg.param_counts()
+    # weights: each device reads its model-axis shard once per step
+    w_bytes = pc["active"] * it / mp
+    n_attn = sum(1 for m, _ in cfg.layers if m == "attn")
+    n_local = sum(1 for m, _ in cfg.layers if m == "attn_local")
+    kv, d, p = cfg.n_kv_heads, cfg.d_head, fkv.page_size
+    n_sel = max(0, (fkv.budget - fkv.n_sink - fkv.n_window) // p)
+    resident = fkv.n_sink + fkv.n_window + p + n_sel * p
+    kv_term = B_loc * kv * resident * d * 2 * it
+    # kv-head or page sharding splits the budget attention over 'model'
+    if cfg.n_kv_heads % mp == 0 or fkv.sharded_retrieval:
+        kv_term /= mp
+    attn_bytes = kv_term * n_attn
+    attn_bytes += (B_loc * kv * min(cfg.sliding_window, 10 ** 9) * d * 2 * it
+                   ) * n_local
+    # pool append (1 page w) + recall (n_sel pages r) + summaries scan
+    n_pages_ctx = shape.seq_len // p
+    pool_bytes = B_loc * kv * 2 * p * d * it * (1 + n_sel) * n_attn
+    summ_bytes = B_loc * kv * n_pages_ctx * 2 * d * it * n_attn
+    if cfg.n_kv_heads % mp == 0 or fkv.sharded_retrieval or B % nb != 0:
+        pool_bytes /= mp
+        summ_bytes /= mp
+    # recurrent states (mamba / xlstm): read + write
+    st = 0.0
+    for m, _ in cfg.layers:
+        if m == "mamba":
+            di = cfg.ssm_expand * cfg.d_model
+            st += 2 * B_loc * di * cfg.ssm_d_state * 4 / mp
+        elif m in ("mlstm", "slstm"):
+            di = int(cfg.xlstm_proj_factor * cfg.d_model)
+            dqk = int(cfg.xlstm_qk_dim_factor * di)
+            st += 2 * B_loc * dqk * (di // max(cfg.n_heads, 1)) * 4
+    return w_bytes + attn_bytes + pool_bytes + summ_bytes + st
+
+
+def model_flops(cfg, shape, n_tokens: int) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode: 2*N_active*D
+    per generated token (fwd only), train: 6 N D (fwd+bwd)."""
+    pc = cfg.param_counts()
+    n_active = pc["active"]
+    if shape.mode == "train":
+        return 6.0 * n_active * n_tokens
+    return 2.0 * n_active * n_tokens

@@ -1,0 +1,61 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m-smoke \
+        --steps 100 --batch 8 --seq 128 [--model-parallel 1]
+
+Uses whatever devices the host offers (make_host_mesh); the production-mesh
+path is exercised by launch/dryrun.py.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.synthetic import lm_batches
+from repro.launch.mesh import make_host_mesh
+from repro.sharding import rules
+from repro.training import checkpoint
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_train, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m-smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    mesh = make_host_mesh(args.model_parallel)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                      total_steps=args.steps)
+    params, opt_state = init_train(cfg, opt, jax.random.PRNGKey(0))
+    with mesh:
+        p_sh = rules.param_shardings(cfg, mesh, params)
+        params = jax.device_put(params, p_sh)
+        step = jax.jit(make_train_step(cfg, opt, mesh=mesh),
+                       donate_argnums=(0, 1))
+        data = lm_batches(cfg.vocab_size, args.seq, args.batch, seed=0)
+        t0 = time.time()
+        for i in range(args.steps):
+            params, opt_state, m = step(params, opt_state,
+                                        {"tokens": jnp.asarray(next(data))})
+            if i % args.log_every == 0 or i == args.steps - 1:
+                tput = args.batch * args.seq * (i + 1) / (time.time() - t0)
+                print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                      f"lr={float(m['lr']):.2e} tok/s={tput:.0f}", flush=True)
+    if args.ckpt:
+        checkpoint.save(args.ckpt, {"params": params, "opt": opt_state})
+        print(f"checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

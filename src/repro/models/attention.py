@@ -1,0 +1,158 @@
+"""GQA attention: params, full/sliding training+prefill paths (chunked, flash-style),
+and dense attention over a budget-sized device cache for decode.
+
+Decode-time retrieval (FreeKV & baselines) lives in ``repro.core``; this module
+provides the math they share.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, dense_init, softcap
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ArchConfig, dtype=jnp.float32, cross=False):
+    d, dh = cfg.d_model, cfg.d_head
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, cfg.n_heads * dh, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * dh, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * dh, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * dh, d, dtype),
+    }
+
+
+def qkv_proj(cfg: ArchConfig, p, x, positions, rope=True):
+    """x: (B,T,d) -> q (B,T,H,dh), k/v (B,T,Hkv,dh); RoPE applied to q,k."""
+    B, T, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, T, cfg.n_heads, cfg.d_head)
+    k = (x @ p["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.d_head)
+    v = (x @ p["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.d_head)
+    if rope:
+        q = apply_rope(cfg, q, positions)
+        k = apply_rope(cfg, k, positions)
+    return q, k, v
+
+
+def out_proj(cfg: ArchConfig, p, o):
+    B, T = o.shape[:2]
+    return o.reshape(B, T, cfg.n_heads * cfg.d_head) @ p["wo"]
+
+
+def _scale(cfg: ArchConfig):
+    return cfg.attn_scale if cfg.attn_scale is not None else 1.0 / (cfg.d_head ** 0.5)
+
+
+def _mask_bias(pos_q, pos_k, causal=True, window=None):
+    """(B,Tq),(B,Tk) -> additive bias (B,1,Tq,Tk). pos_k < 0 marks invalid slots."""
+    dq = pos_q[:, :, None]
+    dk = pos_k[:, None, :]
+    ok = dk >= 0
+    if causal:
+        ok &= dk <= dq
+    if window is not None:
+        ok &= dk > dq - window
+    return jnp.where(ok, 0.0, NEG_INF)[:, None, :, :]
+
+
+def attention_dense(cfg: ArchConfig, q, k, v, pos_q, pos_k, causal=True, window=None):
+    """Reference attention. q:(B,Tq,H,dh) k,v:(B,Tk,Hkv,dh) -> (B,Tq,H,dh)."""
+    B, Tq, H, dh = q.shape
+    G = cfg.group_size
+    qg = q.reshape(B, Tq, cfg.n_kv_heads, G, dh)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k).astype(jnp.float32) * _scale(cfg)
+    s = softcap(s, cfg.attn_logit_softcap)
+    bias = _mask_bias(pos_q, pos_k, causal, window)  # (B,1,Tq,Tk)
+    s = s + bias[:, :, None, :, :]
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskd->btkgd", w.astype(v.dtype), v)
+    return o.reshape(B, Tq, H, dh)
+
+
+# §Perf knob: overrides the flash KV-chunk size (None -> per-call default).
+# Larger chunks cut the (B,kv,G,Tq,dh) f32 accumulator's HBM round trips
+# (bytes ~ Tq*Tk/chunk) at the cost of a larger live score block.
+CHUNK_OVERRIDE = None
+
+
+def attention_chunked(cfg: ArchConfig, q, k, v, pos_q, pos_k, causal=True,
+                      window=None, chunk=512):
+    if CHUNK_OVERRIDE is not None:
+        chunk = CHUNK_OVERRIDE
+    """Flash-style attention: lax.scan over KV chunks with running (max, sum).
+
+    Keeps peak memory at O(Tq * chunk) instead of O(Tq * Tk) — used for the 32K
+    prefill path so the dry-run memory analysis reflects a production kernel.
+    """
+    B, Tq, H, dh = q.shape
+    Tk = k.shape[1]
+    if Tk % chunk:
+        pad = chunk - Tk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_k = jnp.pad(pos_k, ((0, 0), (0, pad)), constant_values=-1)
+        Tk += pad
+    nck = Tk // chunk
+    G = cfg.group_size
+    qg = (q.reshape(B, Tq, cfg.n_kv_heads, G, dh).astype(jnp.float32) * _scale(cfg))
+
+    ks = k.reshape(B, nck, chunk, cfg.n_kv_heads, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nck, chunk, cfg.n_kv_heads, dh).transpose(1, 0, 2, 3, 4)
+    ps = pos_k.reshape(B, nck, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, pc = xs
+        s = jnp.einsum("btkgd,bskd->bkgts", qg, kc.astype(jnp.float32))
+        s = softcap(s, cfg.attn_logit_softcap)
+        bias = _mask_bias(pos_q, pc, causal, window)  # (B,1,Tq,chunk)
+        s = s + bias[:, :, None, :, :]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgts,bskd->bkgtd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, cfg.n_kv_heads, G, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, cfg.n_kv_heads, G, Tq), jnp.float32)
+    a0 = jnp.zeros((B, cfg.n_kv_heads, G, Tq, dh), jnp.float32)
+    # checkpoint per KV chunk: the scan's backward otherwise stores the
+    # (B,kv,G,Tq,chunk) score intermediates for every chunk step
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0),
+                                  (ks, vs, ps))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Tq, H, dh).astype(q.dtype)
+
+
+def attention_auto(cfg: ArchConfig, q, k, v, pos_q, pos_k, causal=True, window=None):
+    # dense path only for small products; production shapes (4K train, 32K
+    # prefill) take the chunked flash path so the scores matrix never
+    # materializes (bounds dry-run temp memory)
+    if q.shape[1] * k.shape[1] <= 2048 * 2048:
+        return attention_dense(cfg, q, k, v, pos_q, pos_k, causal, window)
+    return attention_chunked(cfg, q, k, v, pos_q, pos_k, causal, window)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention over a paged device cache (budget-sized)
+# ---------------------------------------------------------------------------
+def decode_attention_paged(cfg: ArchConfig, q, cache_k, cache_v, cache_pos, pos_q,
+                           window=None):
+    """Single-token decode attention over the device-resident page cache.
+
+    q:        (B, 1, H, dh)
+    cache_k/v:(B, n_slots, p, Hkv, dh)  — NHD page layout (paper's device layout)
+    cache_pos:(B, n_slots, p) int32, -1 = invalid slot
+    Returns (B, 1, H, dh).
+    """
+    B, n_slots, p, Hkv, dh = cache_k.shape
+    k = cache_k.reshape(B, n_slots * p, Hkv, dh)
+    v = cache_v.reshape(B, n_slots * p, Hkv, dh)
+    pos_k = cache_pos.reshape(B, n_slots * p)
+    return attention_dense(cfg, q, k, v, pos_q, pos_k, causal=True, window=window)

@@ -1,0 +1,130 @@
+"""Basic layers: norms, RoPE, MLPs, embeddings. Pure-functional, params = dicts."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in, d_out, dtype=jnp.float32):
+    scale = 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def norm_init(cfg: ArchConfig, d, dtype=jnp.float32):
+    p = {"w": jnp.ones((d,), dtype)}
+    if cfg.norm == "layernorm":
+        p["b"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(cfg: ArchConfig, p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (xf * p["w"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def act_fn(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE (supports partial rotary via rope_fraction)
+# ---------------------------------------------------------------------------
+def rope_freqs(cfg: ArchConfig, d_head=None):
+    d_head = d_head or cfg.d_head
+    d_rot = int(d_head * cfg.rope_fraction)
+    d_rot -= d_rot % 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
+    return inv, d_rot
+
+
+def apply_rope(cfg: ArchConfig, x, positions):
+    """x: (..., T, n_heads, d_head); positions: (..., T) int32."""
+    inv, d_rot = rope_freqs(cfg, x.shape[-1])
+    if d_rot == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., T, d_rot/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = xr[..., : d_rot // 2], xr[..., d_rot // 2:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rot.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Gated / plain MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg: ArchConfig, d_in, d_hidden, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d_in, d_hidden, dtype),
+         "down": dense_init(ks[1], d_hidden, d_in, dtype)}
+    if cfg.gated_mlp:
+        p["gate"] = dense_init(ks[2], d_in, d_hidden, dtype)
+    return p
+
+
+def apply_mlp(cfg: ArchConfig, p, x):
+    h = x @ p["up"]
+    if cfg.gated_mlp:
+        h = act_fn(cfg.act)(x @ p["gate"]) * h
+    else:
+        h = act_fn(cfg.act)(h)
+    return h @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head (vocab padded for sharding; padded logits masked)
+# ---------------------------------------------------------------------------
+def embed_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    v = cfg.padded_vocab()
+    p = {"tok": (jax.random.normal(key, (v, cfg.d_model), jnp.float32)
+                 * (1.0 / jnp.sqrt(cfg.d_model))).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(jax.random.fold_in(key, 1), cfg.d_model, v, dtype)
+    return p
+
+
+def embed_tokens(cfg: ArchConfig, p, tokens):
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def lm_logits(cfg: ArchConfig, p, x, mesh=None):
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    logits = x @ w
+    if mesh is not None and "model" in mesh.axis_names \
+            and logits.shape[-1] % mesh.shape["model"] == 0:
+        # shard logits over vocab immediately: softcap/masking/CE then all
+        # run vocab-parallel (GSPMD otherwise computes them at full vocab)
+        import math as _math
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        nb = _math.prod(mesh.shape[a] for a in ba) if ba else 1
+        bspec = ba if logits.shape[0] % max(nb, 1) == 0 else None
+        spec = P(bspec, *([None] * (logits.ndim - 2)), "model")
+        logits = jax.lax.with_sharding_constraint(
+            logits, NamedSharding(mesh, spec))
+    logits = softcap(logits, cfg.final_logit_softcap)
+    v, vp = cfg.vocab_size, cfg.padded_vocab()
+    if vp != v:
+        mask = jnp.arange(vp) < v
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    return logits

@@ -1,0 +1,144 @@
+"""Mamba-1 selective SSM block (for jamba's hybrid layers).
+
+Train/prefill: lax.scan over time (single HLO while-loop, keeps the 512-device
+dry-run HLO small). Decode: O(1) recurrent update on (conv_buf, h) state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+
+
+def mamba_dims(cfg: ArchConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return di, dt_rank, cfg.ssm_d_state, cfg.ssm_d_conv
+
+
+def mamba_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di, dt_rank, ds, dk = mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (dk, di)) / math.sqrt(dk)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * ds, dtype),
+        "dt_w": dense_init(ks[3], dt_rank, di, dtype),
+        "dt_b": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(A),                    # fp32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d, dtype),
+    }
+
+
+def _ssm_inputs(cfg, p, xc):
+    """xc: (B,T,di) post-conv. Returns dt (B,T,di), Bm, Cm (B,T,ds)."""
+    _, dt_rank, ds, _ = mamba_dims(cfg)
+    dbl = xc @ p["x_proj"]
+    dt, Bm, Cm = jnp.split(dbl, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_w"] + p["dt_b"])
+    return dt.astype(jnp.float32), Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _causal_conv(p, x):
+    """depthwise causal conv: x (B,T,di) -> (B,T,di)."""
+    dk = p["conv_w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (dk - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1], :] * p["conv_w"][i] for i in range(dk))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _di_shard(mesh, a, B):
+    """Keep (..., di) mamba activations sharded over 'model' (di = expand*d
+    divides the model axis for every assigned arch); GSPMD otherwise
+    materializes them replicated + f32 (4.3 GB each on jamba train_4k)."""
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()) \
+            or a.shape[-1] % mesh.shape["model"] != 0:
+        return a
+    import math as _math
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ba = tuple(x for x in ("pod", "data") if x in mesh.axis_names)
+    nb = _math.prod(mesh.shape[x] for x in ba) if ba else 1
+    bspec = ba if B % max(nb, 1) == 0 else None
+    spec = P(bspec, *([None] * (a.ndim - 2)), "model")
+    return jax.lax.with_sharding_constraint(a, NamedSharding(mesh, spec))
+
+
+def mamba_forward(cfg: ArchConfig, p, x, return_state=False, mesh=None):
+    """x: (B,T,d) -> (B,T,d) [, decode state]."""
+    B, T, d = x.shape
+    di, _, ds, dk = mamba_dims(cfg)
+    xm, z = jnp.split(x @ p["in_proj"], 2, axis=-1)
+    xm = _di_shard(mesh, xm, B)
+    z = _di_shard(mesh, z, B)
+    xc = _causal_conv(p, xm)
+    dt, Bm, Cm = _ssm_inputs(cfg, p, xc)
+    dt = _di_shard(mesh, dt, B)
+    A = -jnp.exp(p["A_log"])                                # (di, ds)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp                               # (B,di),(B,di),(B,ds)
+        xt = xt.astype(jnp.float32)
+        dA = jnp.exp(dtt[..., None] * A)                    # (B,di,ds)
+        h = dA * h + (dtt * xt)[..., None] * Bt[:, None, :]
+        y = jnp.einsum("bis,bs->bi", h, Ct) + p["D"] * xt
+        return h, y.astype(x.dtype)
+
+    # time-chunked scan with per-chunk gradient checkpointing: a flat scan's
+    # backward stores the (B,di,ds) carry for every timestep (4.3 GB/layer at
+    # T=4096 for jamba); per-chunk remat keeps only chunk boundaries.
+    # xs stay bf16 (upcast per step); h carry is f32 and di-sharded.
+    ck = 256
+    pad = (-T) % ck
+    xs = (xc.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    if pad:
+        xs = tuple(jnp.pad(a, ((0, pad), (0, 0), (0, 0))) for a in xs)
+    nc = (T + pad) // ck
+    xs = tuple(a.reshape(nc, ck, *a.shape[1:]) for a in xs)
+
+    @jax.checkpoint
+    def chunk(h, xs_c):
+        return jax.lax.scan(step, h, xs_c)
+
+    h0 = _di_shard(mesh, jnp.zeros((B, di, ds), jnp.float32).swapaxes(1, 2),
+                   B).swapaxes(1, 2)
+    hT, ys = jax.lax.scan(chunk, h0, xs)
+    ys = ys.reshape(nc * ck, B, di)[:T]
+    y = ys.transpose(1, 0, 2).astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if return_state:
+        conv_buf = jnp.pad(xm, ((0, 0), (dk - 1, 0), (0, 0)))[:, -(dk - 1):, :]
+        return out, {"h": hT, "conv": conv_buf}
+    return out
+
+
+def mamba_init_state(cfg: ArchConfig, batch, dtype=jnp.float32):
+    di, _, ds, dk = mamba_dims(cfg)
+    return {"h": jnp.zeros((batch, di, ds), jnp.float32),
+            "conv": jnp.zeros((batch, dk - 1, di), dtype)}
+
+
+def mamba_decode_step(cfg: ArchConfig, p, x, state):
+    """x: (B,1,d); state {'h': (B,di,ds), 'conv': (B,dk-1,di)} -> (y, state)."""
+    B = x.shape[0]
+    di, _, ds, dk = mamba_dims(cfg)
+    xm, z = jnp.split(x[:, 0] @ p["in_proj"], 2, axis=-1)   # (B,di)
+    win = jnp.concatenate([state["conv"], xm[:, None, :]], axis=1)  # (B,dk,di)
+    xc = jax.nn.silu(jnp.einsum("bki,ki->bi", win, p["conv_w"]) + p["conv_b"])
+    dt, Bm, Cm = _ssm_inputs(cfg, p, xc[:, None, :])
+    dt, Bm, Cm = dt[:, 0], Bm[:, 0], Cm[:, 0]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)
+    h = dA * state["h"] + (dt * xc.astype(jnp.float32))[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bis,bs->bi", h, Cm) + p["D"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"h": h, "conv": win[:, 1:, :]}

@@ -1,0 +1,261 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar memory,
+sequential) [arXiv:2405.04517].
+
+mLSTM train/prefill uses a flash-style chunked formulation of the stabilized
+parallel form (scan over KV chunks carrying (m, num, den)); decode is the O(1)
+recurrent update on (C, n, m). sLSTM is inherently sequential -> lax.scan.
+
+Simplifications vs the official block (documented in DESIGN.md): no causal conv
+in front of q/k, learnable skip/gate structure reduced to up-proj -> mixer ->
+silu(z)-gated down-proj. The FreeKV paper's technique does not apply to these
+blocks (no KV cache); they exercise the framework's recurrent-state substrate.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+
+NEG_INF = -1e30
+
+
+def xlstm_dims(cfg: ArchConfig):
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    nh = cfg.n_heads
+    di -= di % nh
+    dqk = int(cfg.xlstm_qk_dim_factor * di)
+    dqk -= dqk % nh
+    return di, nh, di // nh, dqk // nh  # di, heads, dv_head, dqk_head
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di, nh, dv, dqk = xlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "up": dense_init(ks[0], d, 2 * di, dtype),
+        "wq": dense_init(ks[1], di, nh * dqk, dtype),
+        "wk": dense_init(ks[2], di, nh * dqk, dtype),
+        "wv": dense_init(ks[3], di, nh * dv, dtype),
+        "wi": dense_init(ks[4], di, nh, jnp.float32),
+        "wf": dense_init(ks[5], di, nh, jnp.float32),
+        "bf": jnp.full((nh,), 3.0, jnp.float32),  # forget-gate bias -> remember
+        "down": dense_init(ks[6], di, d, dtype),
+    }
+
+
+def _mlstm_qkvif(cfg, p, xm):
+    B, T, _ = xm.shape
+    di, nh, dv, dqk = xlstm_dims(cfg)
+    q = (xm @ p["wq"]).reshape(B, T, nh, dqk) / math.sqrt(dqk)
+    k = (xm @ p["wk"]).reshape(B, T, nh, dqk)
+    v = (xm @ p["wv"]).reshape(B, T, nh, dv)
+    log_i = (xm.astype(jnp.float32) @ p["wi"])                     # (B,T,nh)
+    log_f = -jax.nn.softplus(-(xm.astype(jnp.float32) @ p["wf"] + p["bf"]))
+    return q, k, v, log_i, log_f
+
+
+def mlstm_forward(cfg: ArchConfig, p, x, return_state=False, chunk=256):
+    """x: (B,T,d) -> (B,T,d). CHUNKWISE-STATE stabilized mLSTM: scan over time
+    chunks carrying only (C (nh,dqk,dv), n, m) — O(d^2) state, vs the naive
+    kv-chunk scan whose carry holds T-sized accumulators (O(T^2/chunk) bwd
+    memory, 200+ GB/dev on xlstm train_4k). Within a chunk the quadratic
+    stabilized parallel form runs; across chunks the recurrent state carries.
+    """
+    B, T, d = x.shape
+    di, nh, dv, dqk = xlstm_dims(cfg)
+    xm, z = jnp.split(x @ p["up"], 2, axis=-1)
+    q, k, v, log_i, log_f = _mlstm_qkvif(cfg, p, xm)
+
+    pad = (-T) % chunk
+    if pad:  # pad with log_i = -inf => padded steps update nothing
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=NEG_INF)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    Tk = T + pad
+    ncs = Tk // chunk
+
+    def to_chunks(a):
+        return a.reshape(B, ncs, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs = to_chunks(q), to_chunks(k), to_chunks(v)
+    is_, fs_ = to_chunks(log_i), to_chunks(log_f)
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]                  # (t, s): s <= t
+
+    @jax.checkpoint
+    def body(carry, xs):
+        C, n, m = carry                                    # (B,nh,dqk,dv) ...
+        qc, kc, vc, ic, fc = xs
+        qf = qc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        b = jnp.cumsum(fc, axis=1)                         # (B,chunk,nh)
+        # intra-chunk decay logits d_ts = b_t - b_s + i_s  (s <= t)
+        dlog = b[:, :, None, :] - b[:, None, :, :] + ic[:, None, :, :]
+        dlog = jnp.where(causal[None, :, :, None], dlog, NEG_INF)
+        m_intra = jnp.max(dlog, axis=2)                    # (B,chunk,nh)
+        # inter-chunk: state contribution decays by b_t from chunk start
+        m_inter = b + m[:, None, :]                        # (B,chunk,nh)
+        m_t = jnp.maximum(m_intra, m_inter)
+        w = jnp.exp(dlog - m_t[:, :, None, :])             # (B,t,s,nh)
+        qk = jnp.einsum("bthd,bshd->bhts", qf, kf)
+        sw = qk * w.transpose(0, 3, 1, 2)                  # (B,nh,t,s)
+        num = jnp.einsum("bhts,bshd->bthd", sw, vf)
+        den = jnp.sum(sw, axis=-1).transpose(0, 2, 1)      # (B,t,nh)
+        wI = jnp.exp(m_inter - m_t)                        # (B,t,nh)
+        num = num + jnp.einsum("bthd,bhde,bth->bthe", qf, C, wI)
+        den = den + jnp.einsum("bthd,bhd->bth", qf, n) * wI
+        h = num / jnp.maximum(jnp.abs(den),
+                              jnp.exp(-m_t))[..., None]    # (B,t,nh,dv)
+        # end-of-chunk state update
+        bL = b[:, -1, :]                                   # (B,nh)
+        m_state = jnp.maximum(bL + m, jnp.max(bL[:, None] - b + ic, axis=1))
+        wS = jnp.exp(bL[:, None] - b + ic - m_state[:, None])  # (B,s,nh)
+        C_new = (jnp.exp(bL + m - m_state)[:, :, None, None] * C
+                 + jnp.einsum("bsh,bshd,bshe->bhde", wS, kf, vf))
+        n_new = (jnp.exp(bL + m - m_state)[:, :, None] * n
+                 + jnp.einsum("bsh,bshd->bhd", wS, kf))
+        return (C_new, n_new, m_state), h.astype(x.dtype)
+
+    C0 = jnp.zeros((B, nh, dqk, dv), jnp.float32)
+    n0 = jnp.zeros((B, nh, dqk), jnp.float32)
+    m0 = jnp.full((B, nh), NEG_INF, jnp.float32)
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), (qs, ks, vs, is_, fs_))
+    h = hs.swapaxes(0, 1).reshape(B, Tk, di)[:, :T]
+    out = (h * jax.nn.silu(z)) @ p["down"]
+    if return_state:
+        return out, {"C": C, "n": n, "m": m}
+    return out
+
+
+def mlstm_init_state(cfg: ArchConfig, batch, dtype=jnp.float32):
+    di, nh, dv, dqk = xlstm_dims(cfg)
+    return {"C": jnp.zeros((batch, nh, dqk, dv), jnp.float32),
+            "n": jnp.zeros((batch, nh, dqk), jnp.float32),
+            "m": jnp.full((batch, nh), NEG_INF, jnp.float32)}
+
+
+def mlstm_decode_step(cfg: ArchConfig, p, x, state):
+    """x: (B,1,d) -> (y (B,1,d), state). Stabilized recurrent update."""
+    B = x.shape[0]
+    di, nh, dv, dqk = xlstm_dims(cfg)
+    xm, z = jnp.split(x @ p["up"], 2, axis=-1)
+    q, k, v, log_i, log_f = _mlstm_qkvif(cfg, p, xm)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]
+    log_i, log_f = log_i[:, 0], log_f[:, 0]                         # (B,nh)
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    fw = jnp.exp(log_f + state["m"] - m_new)[..., None]
+    iw = jnp.exp(log_i - m_new)[..., None]
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    C = fw[..., None] * state["C"] + iw[..., None] * kf[..., :, None] * vf[..., None, :]
+    n = fw * state["n"] + iw * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, di).astype(x.dtype)
+    out = ((h * jax.nn.silu(z[:, 0])) @ p["down"])[:, None, :]
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    di, nh, dv, _ = xlstm_dims(cfg)
+    dh = di // nh
+    ks = jax.random.split(key, 4)
+    return {
+        "up": dense_init(ks[0], d, 2 * di, dtype),
+        "W": dense_init(ks[1], di, 4 * di, jnp.float32),   # i,f,z,o pre-activations
+        "R": (jax.random.normal(ks[2], (nh, 4 * dh, dh)) / math.sqrt(dh)
+              ).astype(jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((di,)), jnp.full((di,), 3.0),
+                              jnp.zeros((2 * di,))]).astype(jnp.float32),
+        "down": dense_init(ks[3], di, d, dtype),
+    }
+
+
+def slstm_init_state(cfg: ArchConfig, batch, dtype=jnp.float32):
+    di, nh, _, _ = xlstm_dims(cfg)
+    z = jnp.zeros((batch, di), jnp.float32)
+    return {"h": z, "c": z, "n": jnp.ones((batch, di), jnp.float32),
+            "m": jnp.zeros((batch, di), jnp.float32)}
+
+
+def _slstm_cell(cfg, p, xt, st):
+    """xt: (B,di) fp32 pre-activations input; st: state dict."""
+    di = xt.shape[-1] // 4 * 0 + st["h"].shape[-1]
+    nh = cfg.n_heads
+    dh = di // nh
+    B = xt.shape[0]
+    hh = st["h"].reshape(B, nh, dh)
+    rec = jnp.einsum("bhd,hgd->bhg", hh, p["R"]).reshape(B, 4 * di // nh * nh)
+    # note: R maps dh -> 4*dh per head; reshape groups per head then interleave
+    rec = jnp.einsum("bhd,hgd->bhg", hh, p["R"])            # (B,nh,4dh)
+    rec = rec.reshape(B, nh, 4, dh).transpose(0, 2, 1, 3).reshape(B, 4 * di)
+    pre = xt + rec + p["b"]
+    ig, fg, zg, og = jnp.split(pre, 4, axis=-1)
+    log_i = ig
+    log_f = -jax.nn.softplus(-fg)
+    m_new = jnp.maximum(log_f + st["m"], log_i)
+    iw = jnp.exp(log_i - m_new)
+    fw = jnp.exp(log_f + st["m"] - m_new)
+    c = fw * st["c"] + iw * jnp.tanh(zg)
+    n = fw * st["n"] + iw
+    h = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1e-6)
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_forward(cfg: ArchConfig, p, x, return_state=False):
+    B, T, d = x.shape
+    di, nh, _, _ = xlstm_dims(cfg)
+    xm, z = jnp.split(x @ p["up"], 2, axis=-1)
+    pre = xm.astype(jnp.float32) @ p["W"]                    # (B,T,4di)
+
+    def step(st, xt):
+        st = _slstm_cell(cfg, p, xt, st)
+        return st, st["h"]
+
+    # time-chunked + checkpointed (see ssm.py) — sLSTM is inherently
+    # sequential; remat bounds the backward residency to one chunk
+    ck = 256
+    T_ = pre.shape[1]
+    pad = (-T_) % ck
+    xs = pre.transpose(1, 0, 2)
+    if pad:
+        xs = jnp.pad(xs, ((0, pad), (0, 0), (0, 0)))
+    nc = (T_ + pad) // ck
+    xs = xs.reshape(nc, ck, *xs.shape[1:])
+
+    @jax.checkpoint
+    def chunk(st, xs_c):
+        return jax.lax.scan(step, st, xs_c)
+
+    st0 = slstm_init_state(cfg, B)
+    stT, hs = jax.lax.scan(chunk, st0, xs)
+    hs = hs.reshape(nc * ck, B, -1)[:T_]
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    out = (h * jax.nn.silu(z)) @ p["down"]
+    if return_state:
+        return out, stT
+    return out
+
+
+def slstm_decode_step(cfg: ArchConfig, p, x, state):
+    xm, z = jnp.split(x @ p["up"], 2, axis=-1)
+    pre = xm[:, 0].astype(jnp.float32) @ p["W"]
+    st = _slstm_cell(cfg, p, pre, state)
+    out = ((st["h"].astype(x.dtype) * jax.nn.silu(z[:, 0])) @ p["down"])[:, None, :]
+    return out, st

@@ -1,0 +1,28 @@
+"""Token sampling: greedy / temperature / top-p (nucleus)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0     # 0 => greedy
+    top_p: float = 1.0
+
+
+def sample(logits, cfg: SamplerConfig, key):
+    """logits (B, V) -> tokens (B,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < cfg.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits >= cutoff, logits, -jnp.inf)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,184 @@
+"""Sharding rules: pytree paths -> PartitionSpec, MaxText-style but automatic.
+
+Storage strategy (see DESIGN.md §5):
+  * weights: 2D-sharded — first dim over the FSDP axes ("data" [+ "pod"]) and
+    last dim over "model", whenever divisible (expert tensors: experts dim over
+    "model", d over "data"). XLA all-gathers just-in-time (FSDP semantics).
+  * batch dims over ("pod","data") when divisible.
+  * FreeKV pool: batch over data axes; KV-head dim over "model" when divisible,
+    else the *page* dim over "model"; with global batch 1 (long_500k) the page
+    dim absorbs all axes (sequence-parallel retrieval).
+  * replicate anything indivisible — correctness first, the §Perf loop tunes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, FreeKVConfig
+
+
+def axsize(mesh, names) -> int:
+    return math.prod(mesh.shape[n] for n in names)
+
+
+def _div(n, mesh, names) -> bool:
+    return names and all(n2 in mesh.axis_names for n2 in names) \
+        and n % axsize(mesh, names) == 0
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+def param_spec(mesh, path: str, leaf, fsdp_shard: bool = True) -> P:
+    nd = leaf.ndim
+    shape = leaf.shape
+    fsdp = batch_axes(mesh) if fsdp_shard else ()
+    if nd <= 1:
+        return P()
+    if "embed/tok" in path:
+        # (V, d): vocab over "model" so the (tied) LM head produces
+        # model-sharded logits feeding the vocab-parallel CE directly;
+        # the generic rule's P(data, model) forces a full-vocab f32 logits
+        # reshard (67 GB/dev all-gather measured on gemma2 train_4k)
+        v = ("model",) if _div(shape[0], mesh, ("model",)) else ()
+        dd = fsdp if _div(shape[1], mesh, fsdp) else ()
+        return P(v or None, dd or None)
+    if nd == 3 and any(k in path for k in ("wg", "wu", "wd")):  # (E, a, b)
+        e = ("model",) if _div(shape[0], mesh, ("model",)) else ()
+        a = fsdp if _div(shape[1], mesh, fsdp) else ()
+        return P(e or None, a or None, None)
+    if nd == 3 and "/R" in path:                                 # slstm (nh,4dh,dh)
+        return P(None, None, None)
+    # generic 2D (+ stacked-period 3D where dim0 is n_periods): shard the two
+    # trailing matrix dims
+    lead = nd - 2
+    d_in, d_out = shape[-2], shape[-1]
+    s_in = fsdp if _div(d_in, mesh, fsdp) else ()
+    s_out = ("model",) if _div(d_out, mesh, ("model",)) else ()
+    return P(*([None] * lead), s_in or None, s_out or None)
+
+
+def param_shardings(cfg: ArchConfig, mesh, params_shape, fsdp_shard=True):
+    def f(path, leaf):
+        return NamedSharding(mesh, param_spec(mesh, _path_str(path), leaf,
+                                              fsdp_shard=fsdp_shard))
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def inference_fsdp(cfg: ArchConfig, mesh, hbm_budget_frac=0.25) -> bool:
+    """Inference weight-layout decision: store weights sharded over 'model'
+    only (no FSDP dim) when they fit in a fraction of HBM — serving then pays
+    ZERO per-step weight all-gathers (the dominant decode collective;
+    §Perf log). Giant models (jamba-398B) keep the FSDP dim."""
+    mp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    per_dev = cfg.param_counts()["total"] * 2 / mp
+    return per_dev > hbm_budget_frac * 16e9  # True -> keep FSDP sharding
+
+
+# ---------------------------------------------------------------------------
+# batches (train / prefill inputs)
+# ---------------------------------------------------------------------------
+def batch_shardings(cfg: ArchConfig, mesh, batch_shape):
+    ba = batch_axes(mesh)
+
+    def f(path, leaf):
+        B = leaf.shape[0]
+        spec = [ba if _div(B, mesh, ba) else None] + [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(f, batch_shape)
+
+
+# ---------------------------------------------------------------------------
+# decode state
+# ---------------------------------------------------------------------------
+def decode_state_spec(cfg: ArchConfig, mesh, path: str, leaf,
+                      fkv: FreeKVConfig = None) -> P:
+    ba = batch_axes(mesh)
+    shape = leaf.shape
+    nd = leaf.ndim
+    B = shape[0]
+    b_ok = _div(B, mesh, ba)
+    # stacked-period leading dim: pattern states are (n_periods, B, ...)
+    lead = 0
+    if "pattern" in path and nd >= 2:
+        lead, shape = 1, shape[1:]
+        nd -= 1
+        B = shape[0]
+        b_ok = _div(B, mesh, ba)
+    b_spec = ba if b_ok else None
+
+    def out(*rest):
+        return P(*([None] * lead), b_spec, *rest)
+
+    key = path.rsplit("/", 1)[-1]
+    kv_div = _div(cfg.n_kv_heads, mesh, ("model",))
+    sharded_r = bool(fkv and fkv.sharded_retrieval)
+    if sharded_r:
+        # sharded speculative retrieval (§Perf): pool page-sharded, selected
+        # buffers sharded over the n_sel dim — all retrieval ops shard-local
+        if key in ("pool", "summ") and _div(shape[1], mesh, ("model",)):
+            return out("model", *([None] * (nd - 2)))
+        if key in ("sel_k", "sel_v") and _div(shape[2], mesh, ("model",)):
+            return out(None, "model", None, None)
+        if key == "sel_idx" and _div(shape[2], mesh, ("model",)):
+            return out(None, "model")
+    if key in ("pool", "summ"):
+        # (B, n_pages, kv, ...)
+        n_pages = shape[1]
+        if kv_div:
+            return out(None, "model", *([None] * (nd - 3)))
+        page_axes = ("model",) if b_ok else tuple(
+            a for a in ("pod", "data", "model") if a in mesh.axis_names)
+        if _div(n_pages, mesh, page_axes):
+            return out(page_axes, *([None] * (nd - 2)))
+        return out(*([None] * (nd - 1)))
+    if key in ("sel_k", "sel_v"):                    # (B, kv, n_sel, p, d)
+        return out("model" if kv_div else None, None, None, None)
+    if key in ("sel_idx",):
+        return out("model" if kv_div else None, None)
+    if key in ("sink_k", "sink_v", "win_k", "win_v", "k", "v", "xk", "xv"):
+        # (B, T, kv, d)
+        return out(None, "model" if kv_div else None, None)
+    if key in ("k_u",):                              # (B, kv, T, r)
+        return out("model" if kv_div else None, None, None)
+    if key in ("k_w",):
+        return out("model" if kv_div else None, None, None)
+    if key in ("keep_k", "keep_v"):
+        return out("model" if kv_div else None, None, None, None)
+    if key in ("keep_idx", "last_used"):
+        return out("model" if kv_div else None, None)
+    if key == "qprev":                               # (B, H, d)
+        return out("model" if _div(cfg.n_heads, mesh, ("model",)) else None, None)
+    if key in ("h",) and nd == 3:                    # mamba (B, di, ds)
+        return out("model" if _div(shape[1], mesh, ("model",)) else None, None)
+    if key == "conv":                                # (B, dk-1, di)
+        return out(None, "model" if _div(shape[2], mesh, ("model",)) else None)
+    if key == "C":                                   # mlstm (B, nh, dqk, dv)
+        return out(None, None, "model" if _div(shape[3], mesh, ("model",)) else None)
+    if key == "n" and nd == 3:
+        return out(None, None)
+    # scalars / misc (length, pos, m, win_pos, slstm h/c/n/m ...)
+    return out(*([None] * (nd - 1)))
+
+
+def decode_state_shardings(cfg: ArchConfig, mesh, state_shape, fkv=None):
+    def f(path, leaf):
+        return NamedSharding(
+            mesh, decode_state_spec(cfg, mesh, _path_str(path), leaf, fkv))
+    return jax.tree_util.tree_map_with_path(f, state_shape)
+
+
+def replicated(mesh, tree_shape):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree_shape)

@@ -1,0 +1,29 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import FreeKVConfig
+
+
+@pytest.fixture(scope="session")
+def small_fkv():
+    return FreeKVConfig(method="freekv", page_size=8, budget=64, n_sink=8,
+                        n_window=8, tau=0.8)
+
+
+@pytest.fixture(scope="session")
+def smoke_cfg():
+    return get_config("granite-3-8b-smoke")
+
+
+def rand_kv(key, B, T, kv, d, dtype=jnp.float32):
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, kv, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, kv, d), dtype)
+    return k, v

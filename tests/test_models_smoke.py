@@ -1,0 +1,96 @@
+"""Per-architecture smoke tests: REDUCED variant of each assigned arch family
+(<=3 layers, d_model<=256, <=4 experts) running one forward/train step and a
+prefill+decode step on CPU, asserting shapes + finiteness."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, ASSIGNED, PAPER_MODELS
+from repro.configs.base import FreeKVConfig
+from repro.models.model import forward_train, init_params, prefill, serve_step
+
+KEY = jax.random.PRNGKey(0)
+FKV = FreeKVConfig(method="freekv", page_size=8, budget=64, n_sink=8,
+                   n_window=8, tau=0.8)
+
+
+def _batch(cfg, B=2, T=64):
+    b = {"tokens": jax.random.randint(KEY, (B, T), 0, cfg.vocab_size)}
+    if cfg.frontend:
+        b["frontend"] = 0.1 * jax.random.normal(
+            KEY, (B, cfg.n_frontend_tokens, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", list(ASSIGNED) + list(PAPER_MODELS))
+def test_smoke_train_and_decode(arch):
+    cfg = get_config(arch + "-smoke")
+    assert cfg.d_model <= 512 and cfg.n_layers <= 3
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+    params = init_params(cfg, KEY)
+    batch = _batch(cfg)
+    loss, metrics = jax.jit(lambda p, b: forward_train(cfg, p, b))(params,
+                                                                   batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), arch
+    assert jnp.isfinite(metrics["ce"])
+
+    logits, st = jax.jit(
+        lambda p, b: prefill(cfg, FKV, p, b, max_len=96,
+                             state_dtype=jnp.float32))(params, batch)
+    assert logits.shape == (2, cfg.padded_vocab())
+    assert jnp.isfinite(logits).all(), arch
+    tok = jnp.argmax(logits, -1)[:, None]
+    logits2, st = jax.jit(
+        lambda p, s, t: serve_step(cfg, FKV, p, s, t))(params, st, tok)
+    assert logits2.shape == (2, cfg.padded_vocab())
+    assert jnp.isfinite(logits2).all(), arch
+    n_front = cfg.n_frontend_tokens if (cfg.frontend and
+                                        not cfg.is_encoder_decoder) else 0
+    assert int(st["pos"][0]) == 64 + n_front + 1
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "deepseek-moe-16b",
+                                  "jamba-1.5-large-398b"])
+def test_smoke_grad_finite(arch):
+    cfg = get_config(arch + "-smoke")
+    params = init_params(cfg, KEY)
+    batch = _batch(cfg, T=32)
+
+    def loss_fn(p):
+        return forward_train(cfg, p, batch)[0]
+
+    g = jax.jit(jax.grad(loss_fn))(params)
+    for leaf in jax.tree.leaves(g):
+        assert jnp.isfinite(leaf).all(), arch
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact assigned dimensions."""
+    expect = {
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+    }
+    for arch, (L, d, h, kvh, dff, v) in expect.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+                c.vocab_size) == (L, d, h, kvh, dff, v), arch
+    # MoE extras
+    dm = get_config("deepseek-moe-16b")
+    assert (dm.n_experts, dm.moe_top_k, dm.n_shared_experts) == (64, 6, 2)
+    l4 = get_config("llama4-scout-17b-a16e")
+    assert (l4.n_experts, l4.moe_top_k) == (16, 1)
+    jb = get_config("jamba-1.5-large-398b")
+    assert (jb.n_experts, jb.moe_top_k) == (16, 2)
+    # jamba 1:7 attention interleave
+    mixers = [m for m, _ in jb.pattern]
+    assert mixers.count("attn") == 1 and len(mixers) == 8

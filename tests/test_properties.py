@@ -1,0 +1,148 @@
+"""Hypothesis property tests for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.base import FreeKVConfig
+from repro.core import selection
+from repro.core.retrieval import _window_floor
+from repro.core.correction import query_similarity
+from repro.training.optimizer import AdamWConfig, lr_at
+
+CFG = get_config("granite-3-8b-smoke")
+SETTINGS = settings(max_examples=40, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# the three-region partition (sink / selected pages / window) is exact
+# ---------------------------------------------------------------------------
+@given(length=st.integers(min_value=1, max_value=2000),
+       p=st.sampled_from([4, 8, 16, 32]),
+       sink_pages=st.integers(min_value=0, max_value=4),
+       win_pages=st.integers(min_value=1, max_value=6))
+@SETTINGS
+def test_region_partition_exact(length, p, sink_pages, win_pages):
+    fkv = FreeKVConfig(method="freekv", page_size=p, budget=10 ** 6,
+                       n_sink=sink_pages * p, n_window=win_pages * p)
+    L = jnp.array([length])
+    wf = int(_window_floor(fkv, L)[0])
+    n_pages = -(-length // p) + 2
+    sel_mask = np.asarray(
+        selection.selectable_mask(CFG, fkv, n_pages, L))[0]
+    covered = np.zeros(length, dtype=int)
+    covered[: min(fkv.n_sink, length)] += 1                  # sink region
+    covered[min(wf, length): length] += 1                    # window region
+    for pg in range(n_pages):                                # selected pages
+        if sel_mask[pg]:
+            lo, hi = pg * p, min((pg + 1) * p, length)
+            # selection region masked to [n_sink, window_floor)
+            lo2, hi2 = max(lo, fkv.n_sink), min(hi, wf)
+            if hi2 > lo2:
+                covered[lo2:hi2] += 1
+    # window ring holds the last n_window + p tokens; everything in
+    # [window_floor, length) must be within it
+    assert wf >= length - fkv.n_window - p
+    assert (covered == 1).all(), (length, p, sink_pages, win_pages, covered)
+
+
+# ---------------------------------------------------------------------------
+# Quest min-max score is an upper bound on any key inside the page box
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(min_value=0, max_value=10 ** 6))
+@SETTINGS
+def test_quest_score_upper_bound(seed):
+    key = jax.random.PRNGKey(seed)
+    d, p = 16, 8
+    q = jax.random.normal(key, (1, 2, d))                # (B,H,d), kv=2,G=1
+    ks = jax.random.normal(jax.random.fold_in(key, 1), (1, p, 2, d))
+    summ = jnp.stack([ks.min(1), ks.max(1)], axis=2)[:, None]  # (1,1,kv,2,d)
+    s = selection.page_scores_minmax(q, summ, scale=1.0)       # (1,H,1)
+    true = jnp.einsum("bhd,bpkd->bhkp", q,
+                      ks)                                       # h==kv here G=1
+    for h in range(2):
+        assert float(s[0, h, 0]) >= float(true[0, h, h].max()) - 1e-4
+
+
+@given(seed=st.integers(min_value=0, max_value=10 ** 6),
+       n_sel=st.integers(min_value=1, max_value=8))
+@SETTINGS
+def test_selection_valid_distinct(seed, n_sel):
+    key = jax.random.PRNGKey(seed)
+    fkv = FreeKVConfig(method="freekv", page_size=8, budget=10 ** 4,
+                       n_sink=8, n_window=8)
+    B, H, d, n_pages = 1, CFG.n_heads, CFG.d_head, 12
+    q = jax.random.normal(key, (B, H, d))
+    summ = jax.random.normal(jax.random.fold_in(key, 1),
+                             (B, n_pages, CFG.n_kv_heads, 2, d))
+    length = jnp.array([12 * 8])
+    idx, _ = selection.select_pages(CFG, fkv, q, summ, length, n_sel)
+    idx = np.asarray(idx)
+    valid = np.asarray(selection.selectable_mask(CFG, fkv, n_pages, length))[0]
+    for b in range(B):
+        for k in range(CFG.n_kv_heads):
+            sel = idx[b, k][idx[b, k] >= 0]
+            assert len(set(sel.tolist())) == len(sel)      # distinct
+            assert all(valid[s] for s in sel)              # in-range
+
+
+# ---------------------------------------------------------------------------
+# correction similarity
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(min_value=0, max_value=10 ** 6),
+       scale=st.floats(min_value=0.1, max_value=10))
+@SETTINGS
+def test_cosine_similarity_properties(seed, scale):
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (2, 4, 16))
+    s_same = query_similarity(q, q * scale)        # scale-invariant
+    np.testing.assert_allclose(np.asarray(s_same), 1.0, atol=1e-5)
+    s_neg = query_similarity(q, -q)
+    np.testing.assert_allclose(np.asarray(s_neg), -1.0, atol=1e-5)
+    qa = jax.random.normal(jax.random.fold_in(key, 1), q.shape)
+    s = np.asarray(query_similarity(q, qa))
+    assert (s >= -1 - 1e-5).all() and (s <= 1 + 1e-5).all()
+
+
+# ---------------------------------------------------------------------------
+# optimizer / schedule
+# ---------------------------------------------------------------------------
+@given(step=st.integers(min_value=0, max_value=20000))
+@SETTINGS
+def test_lr_schedule_bounds(step):
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=100, total_steps=10000,
+                      min_lr_ratio=0.1)
+    lr = float(lr_at(cfg, step))
+    assert 0.0 <= lr <= cfg.lr + 1e-9
+    if step >= cfg.warmup_steps:
+        assert lr >= cfg.lr * cfg.min_lr_ratio - 1e-9
+
+
+def test_adamw_minimizes_quadratic():
+    from repro.training.optimizer import adamw_init, adamw_update
+    cfg = AdamWConfig(lr=0.05, warmup_steps=0, total_steps=200,
+                      weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = adamw_init(params, cfg)
+    for _ in range(150):
+        g = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(g, opt, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(min_value=0, max_value=10 ** 6),
+       temp=st.floats(min_value=0.1, max_value=2.0),
+       top_p=st.floats(min_value=0.1, max_value=1.0))
+@SETTINGS
+def test_sampling_in_vocab(seed, temp, top_p):
+    from repro.serving.sampling import SamplerConfig, sample
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (3, 50))
+    toks = sample(logits, SamplerConfig(temperature=temp, top_p=top_p), key)
+    assert ((toks >= 0) & (toks < 50)).all()
+    greedy = sample(logits, SamplerConfig(temperature=0.0), key)
+    assert (greedy == jnp.argmax(logits, -1)).all()
