@@ -1,6 +1,7 @@
 """End-to-end serving driver: batched long-context requests, comparing KV
 retrieval methods (full / quest / arkvale / freekv) on identical prompts —
-greedy outputs, per-step decode latency, retrieval statistics.
+greedy outputs, per-step decode latency, retrieval statistics — under the
+continuous-batching scheduler (``--scheduler static`` for the chunked path).
 
     PYTHONPATH=src python examples/serve_longcontext.py [--context 512]
 """
@@ -25,6 +26,9 @@ def main():
     ap.add_argument("--context", type=int, default=512)
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--scheduler", choices=("continuous", "static"),
+                    default="continuous")
+    ap.add_argument("--prefix-cache-tokens", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config("granite-3-8b-smoke")
@@ -47,8 +51,9 @@ def main():
     ref = None
     for name, fkv in methods.items():
         eng = ServeEngine(cfg, fkv, params,
-                          max_len=args.context + args.new_tokens + page,
-                          batch_size=args.batch)
+                          max_len=args.context + args.new_tokens + page + 64,
+                          batch_size=args.batch, scheduler=args.scheduler,
+                          prefix_cache_tokens=args.prefix_cache_tokens)
         reqs = [Request(uid=i, tokens=p, max_new_tokens=args.new_tokens)
                 for i, p in enumerate(prompts)]
         outs = eng.generate(reqs)
@@ -58,9 +63,11 @@ def main():
         agree = (np.mean([a == b for a, b in zip(toks, ref)])
                  if ref else float("nan"))
         o = outs[0]
-        print(f"{name:8s} step={o.decode_s/o.steps*1e3:7.1f} ms "
+        em = eng.last_metrics
+        print(f"{name:8s} step={o.decode_s/max(o.steps, 1)*1e3:7.1f} ms "
               f"match_vs_full={agree:.2f} "
               f"corr_rate={o.stats.get('correction_rate', 0):.3f} "
+              f"occupancy={em.slot_occupancy if em else 0:.2f} "
               f"tokens={toks[:8]}...")
 
 

@@ -60,6 +60,28 @@ def init_kv_state(cfg: ArchConfig, fkv: FreeKVConfig, batch: int, max_len: int,
 
 
 # ---------------------------------------------------------------------------
+# per-slot state surgery (continuous batching)
+# ---------------------------------------------------------------------------
+# The decode state's page tables (pool/summ/sel_idx/win_pos/length) carry the
+# batch dimension on axis 0 per layer — or axis 1 for period-stacked pattern
+# layers. Continuous batching maps logical requests onto physical batch slots
+# by functionally splicing one row in or out; XLA lowers these to in-place
+# dynamic-update-slices so a slot refill never copies the other slots' pools.
+def slot_write_leaf(dst, src, slot, axis=0):
+    """Write ``src``'s singleton batch row into ``dst``'s row ``slot``.
+
+    dst (..., B, ...) with batch on ``axis``; src identical but batch size 1;
+    ``slot`` may be a traced scalar (one compile serves every slot)."""
+    upd = jax.lax.index_in_dim(src, 0, axis, keepdims=False).astype(dst.dtype)
+    return jax.lax.dynamic_update_index_in_dim(dst, upd, slot, axis)
+
+
+def slot_read_leaf(arr, slot, axis=0):
+    """Extract row ``slot`` as a singleton-batch array (inverse of write)."""
+    return jax.lax.dynamic_index_in_dim(arr, slot, axis, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
 # layout conversions
 # ---------------------------------------------------------------------------
 def nhd_pages_to_hnd(k_pages, v_pages):

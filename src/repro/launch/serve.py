@@ -1,12 +1,13 @@
 """Serving launcher CLI: batched requests against any arch + retrieval method.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b-smoke \
-        --method freekv --context 512 --new-tokens 16 --batch 2
+        --method freekv --context 512 --new-tokens 16 --batch 2 \
+        --scheduler continuous --prefix-cache-tokens 4096
 """
 import argparse
+import json
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import FreeKVConfig
@@ -23,10 +24,16 @@ def main():
     ap.add_argument("--context", type=int, default=512)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="total requests (default: one per batch slot)")
     ap.add_argument("--budget", type=int, default=128)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--tau", type=float, default=0.8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--scheduler", choices=("continuous", "static"),
+                    default="continuous")
+    ap.add_argument("--prefill-bucket", type=int, default=64)
+    ap.add_argument("--prefix-cache-tokens", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -35,17 +42,25 @@ def main():
                        budget=args.budget, n_sink=args.page_size * 2,
                        n_window=args.page_size * 2, tau=args.tau)
     eng = ServeEngine(cfg, fkv, params,
-                      max_len=args.context + args.new_tokens + args.page_size,
+                      max_len=args.context + args.new_tokens + args.page_size
+                      + args.prefill_bucket,
                       batch_size=args.batch,
-                      sampler=SamplerConfig(temperature=args.temperature))
+                      sampler=SamplerConfig(temperature=args.temperature),
+                      scheduler=args.scheduler,
+                      prefill_bucket=args.prefill_bucket,
+                      prefix_cache_tokens=args.prefix_cache_tokens)
+    n_req = args.requests or args.batch
     stream = needle_stream(cfg.vocab_size, args.context, args.page_size)
     reqs = [Request(uid=i, tokens=next(stream).tokens,
-                    max_new_tokens=args.new_tokens) for i in range(args.batch)]
+                    max_new_tokens=args.new_tokens) for i in range(n_req)]
     for out in eng.generate(reqs):
+        steps = max(out.steps, 1)
         print(f"req {out.uid}: {out.tokens}")
         print(f"  prefill {out.prefill_s*1e3:.1f} ms | "
-              f"decode {out.decode_s/out.steps*1e3:.1f} ms/step | "
+              f"decode {out.decode_s/steps*1e3:.1f} ms/step | "
               f"corr_rate {out.stats.get('correction_rate', 0):.3f}")
+    if eng.last_metrics is not None:
+        print(json.dumps(eng.last_metrics.summary(), indent=2, default=str))
 
 
 if __name__ == "__main__":

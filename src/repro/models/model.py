@@ -451,37 +451,136 @@ def _prefill_layer_state(cfg, fkv, lk, retr, extras, max_len, dtype, enc=None):
 
 
 def prefill(cfg: ArchConfig, fkv: FreeKVConfig, params, batch, max_len: int,
-            mesh=None, state_dtype=jnp.bfloat16):
-    """Returns (last-position logits (B, vocab), decode state)."""
+            mesh=None, state_dtype=jnp.bfloat16, return_kv=False):
+    """Returns (last-position logits (B, vocab), decode state).
+
+    With ``return_kv`` also returns the per-layer post-RoPE K/V of the prompt
+    ({"prelude": ((k, v) | None, ...), "pattern": ((k, v) stacked over
+    periods, ...)}) for the serving prefix cache; non-attention mixers yield
+    None entries."""
     x, positions, n_front = _embed_inputs(cfg, params, batch)
     enc_x = _encode(cfg, params, batch["frontend"]) if cfg.is_encoder_decoder \
         else None
     pre_r, pat_r = _retrievers(cfg, fkv, mesh)
 
-    pre_states = []
+    def _kv_of(lk, ex):
+        return (ex["k"], ex["v"]) if lk[0] in (ATTN, ATTN_LOCAL) else None
+
+    pre_states, pre_kv = [], []
     for lp, lk, r in zip(params["prelude"], cfg.prelude, pre_r):
         enc = _enc_kv(cfg, lp, enc_x) if enc_x is not None else None
         x, _, ex = _apply_layer_seq(cfg, lk, lp, x, positions, mesh, enc)
         pre_states.append(
             _prefill_layer_state(cfg, fkv, lk, r, ex, max_len, state_dtype, enc))
+        pre_kv.append(_kv_of(lk, ex))
 
     def scan_body(x, lps):
-        sts = []
+        sts, kvs = [], []
         for pos_i, lk in enumerate(cfg.pattern):
             lp = lps[pos_i]
             enc = _enc_kv(cfg, lp, enc_x) if enc_x is not None else None
             x, _, ex = _apply_layer_seq(cfg, lk, lp, x, positions, mesh, enc)
             sts.append(_prefill_layer_state(cfg, fkv, lk, pat_r[pos_i], ex,
                                             max_len, state_dtype, enc))
-        return x, tuple(sts)
+            kvs.append(_kv_of(lk, ex) if return_kv else None)
+        return x, (tuple(sts), tuple(kvs))
 
-    x, pat_states = jax.lax.scan(scan_body, x, params["pattern"])
+    x, (pat_states, pat_kv) = jax.lax.scan(scan_body, x, params["pattern"])
     x = L.apply_norm(cfg, params["final_norm"], x)
     logits = L.lm_logits(cfg, params["embed"], x[:, -1])
     B, T = x.shape[:2]
     state = {"prelude": tuple(pre_states), "pattern": pat_states,
              "pos": jnp.full((B,), T, jnp.int32)}
+    if return_kv:
+        return logits, state, {"prelude": tuple(pre_kv), "pattern": pat_kv}
     return logits, state
+
+
+# ---------------------------------------------------------------------------
+# prefill extension: run only a prompt suffix over cached prefix K/V
+# ---------------------------------------------------------------------------
+def supports_kv_extend(cfg: ArchConfig) -> bool:
+    """Prefix-cache extension needs every token's context to live in K/V form:
+    attention-only stacks, no encoder-decoder cross state, no frontend prefix.
+    Recurrent mixers (mamba/xlstm) compress history into a state that cannot
+    be sliced per token, so those configs take the full-prefill path."""
+    return (not cfg.is_encoder_decoder and cfg.frontend is None
+            and all(m in (ATTN, ATTN_LOCAL) for m, _ in cfg.layers))
+
+
+def _apply_layer_extend(cfg, lk, lp, x, q_pos, kv_pos, pk, pv, mesh):
+    """One layer of suffix prefill: queries at q_pos attend over cached prefix
+    K/V concatenated with the suffix's fresh K/V."""
+    mixer, _ = lk
+    x = _bshard(mesh, x)
+    lp = _gather_for_compute(cfg, mesh, lp)
+    h = L.apply_norm(cfg, lp["norm1"], x)
+    q, k, v = attn.qkv_proj(cfg, lp["mixer"], h, q_pos)
+    k_full = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+    v_full = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+    window = cfg.sliding_window if mixer == ATTN_LOCAL else None
+    o = attn.attention_auto(cfg, q, k_full, v_full, q_pos, kv_pos,
+                            causal=True, window=window)
+    x = _residual(cfg, lp, x, attn.out_proj(cfg, lp["mixer"], o), "1")
+    x, _ = _apply_ffn(cfg, lk, lp, x, mesh)
+    return x, {"q_last": q[:, -1], "k": k_full, "v": v_full,
+               "k_new": k, "v_new": v}
+
+
+def prefill_extend(cfg: ArchConfig, fkv: FreeKVConfig, params, batch,
+                   prefix_kv, max_len: int, mesh=None,
+                   state_dtype=jnp.bfloat16):
+    """Prefill ``batch["tokens"]`` (B, S) as the continuation of a cached
+    prefix whose per-layer post-RoPE K/V is ``prefix_kv`` ({"prelude":
+    ((k, v), ...) with k (B, Tp, kv, dh), "pattern": ((k, v) stacked
+    (n_periods, B, Tp, kv, dh), ...)}).
+
+    Skips the transformer forward for the prefix span — only the suffix is
+    embedded and attended (over prefix+suffix K/V); the paged decode state is
+    rebuilt from the concatenated K/V via each retriever's ``prefill``.
+    Returns (logits, state, suffix_kv) where suffix_kv mirrors prefix_kv's
+    structure with T=S (for prefix-cache insertion of the full prompt).
+    """
+    assert supports_kv_extend(cfg), \
+        f"{cfg.name}: prefix-cache extension requires an attention-only stack"
+    tokens = batch["tokens"]
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    B, S = tokens.shape
+    if prefix_kv["prelude"]:
+        Tp = prefix_kv["prelude"][0][0].shape[1]
+    else:
+        Tp = prefix_kv["pattern"][0][0].shape[2]
+    q_pos = jnp.broadcast_to(jnp.arange(Tp, Tp + S)[None], (B, S))
+    kv_pos = jnp.broadcast_to(jnp.arange(Tp + S)[None], (B, Tp + S))
+    pre_r, pat_r = _retrievers(cfg, fkv, mesh)
+
+    pre_states, pre_kv = [], []
+    for lp, lk, r, pkv in zip(params["prelude"], cfg.prelude, pre_r,
+                              prefix_kv["prelude"]):
+        x, ex = _apply_layer_extend(cfg, lk, lp, x, q_pos, kv_pos,
+                                    pkv[0], pkv[1], mesh)
+        st = r.init_state(B, max_len, state_dtype)
+        pre_states.append(r.prefill(st, ex["k"], ex["v"], ex["q_last"]))
+        pre_kv.append((ex["k_new"], ex["v_new"]))
+
+    def scan_body(x, xs):
+        lps, pkvs = xs
+        sts, kvs = [], []
+        for pos_i, lk in enumerate(cfg.pattern):
+            x, ex = _apply_layer_extend(cfg, lk, lps[pos_i], x, q_pos, kv_pos,
+                                        pkvs[pos_i][0], pkvs[pos_i][1], mesh)
+            st = pat_r[pos_i].init_state(B, max_len, state_dtype)
+            sts.append(pat_r[pos_i].prefill(st, ex["k"], ex["v"], ex["q_last"]))
+            kvs.append((ex["k_new"], ex["v_new"]))
+        return x, (tuple(sts), tuple(kvs))
+
+    x, (pat_states, pat_kv) = jax.lax.scan(
+        scan_body, x, (params["pattern"], prefix_kv["pattern"]))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(cfg, params["embed"], x[:, -1])
+    state = {"prelude": tuple(pre_states), "pattern": pat_states,
+             "pos": jnp.full((B,), Tp + S, jnp.int32)}
+    return logits, state, {"prelude": tuple(pre_kv), "pattern": pat_kv}
 
 
 # ---------------------------------------------------------------------------

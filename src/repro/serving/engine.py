@@ -1,24 +1,44 @@
 """Serving engine: batched prefill + decode with any retrieval method.
 
-Continuous-batching-lite: a fixed number of batch slots; finished requests free
-their slot and queued requests take it at the next prefill boundary (per-slot
-state reset is a functional update). Per-step wall-clock and retrieval
-statistics feed the latency benchmarks.
+Two schedulers share the jitted model entry points:
+
+* ``scheduler="continuous"`` (default) — the ``serving.scheduler`` /
+  ``serving.kv_slots`` subsystem: a fixed pool of physical batch slots, slot
+  refill at every step boundary, and an optional radix-trie prefix cache
+  (``prefix_cache_tokens > 0``) that skips the transformer forward for a
+  previously prefilled shared prompt prefix via ``model.prefill_extend``.
+* ``scheduler="static"`` — the original chunked lockstep path, kept as a
+  fallback and as the baseline for ``benchmarks/serving_throughput.py``.
+
+Prompt lengths can be bucketed (``prefill_bucket``) to bound the number of
+compiled prefill shapes under heterogeneous traffic: cold prompts are
+left-padded to the bucket (pads become attended context, exactly as the
+chunked path treats ragged batches) and the *padded* token sequence keys the
+prefix cache — two identically padded prompts dedupe exactly. The default
+``prefill_bucket=1`` pads nothing (outputs are unchanged from the chunked
+path for equal-length traffic) at the cost of one compile per distinct prompt
+length. Cache hits shrink the reused span so the suffix is an exact bucket
+multiple — the extension path never pads — but note each distinct
+(prefix_len, suffix_len) pair is its own compiled shape.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from dataclasses import dataclass
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, FreeKVConfig
-from repro.models.model import prefill, serve_step
+from repro.models.model import (prefill, prefill_extend, serve_step,
+                                supports_kv_extend)
+from repro.serving.kv_slots import SlotPool
+from repro.serving.metrics import EngineMetrics, RequestMetrics
+from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.sampling import SamplerConfig, sample
+from repro.serving.scheduler import ContinuousScheduler, _request_stats
 
 
 @dataclass
@@ -27,6 +47,7 @@ class Request:
     tokens: np.ndarray                 # prompt (T,)
     max_new_tokens: int = 32
     frontend: Optional[np.ndarray] = None
+    eos_token: Optional[int] = None
 
 
 @dataclass
@@ -37,31 +58,183 @@ class Completion:
     decode_s: float
     steps: int
     stats: dict
+    metrics: Optional[RequestMetrics] = None
 
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, fkv: FreeKVConfig, params,
                  max_len: int, batch_size: int,
                  sampler: SamplerConfig = SamplerConfig(),
-                 state_dtype=jnp.float32, mesh=None):
+                 state_dtype=jnp.float32, mesh=None,
+                 scheduler: str = "continuous",
+                 prefill_bucket: int = 1,
+                 prefix_cache_tokens: int = 0,
+                 pad_token: int = 0):
+        assert scheduler in ("continuous", "static"), scheduler
         self.cfg, self.fkv, self.params = cfg, fkv, params
         self.max_len, self.batch_size = max_len, batch_size
         self.sampler = sampler
+        self.state_dtype = state_dtype
+        self.scheduler = scheduler
+        self.prefill_bucket = max(1, prefill_bucket)
+        self.pad_token = pad_token
         self._prefill = jax.jit(
             lambda p, b: prefill(cfg, fkv, p, b, max_len=max_len,
                                  state_dtype=state_dtype, mesh=mesh))
+        self._prefill_kv = jax.jit(
+            lambda p, b: prefill(cfg, fkv, p, b, max_len=max_len,
+                                 state_dtype=state_dtype, mesh=mesh,
+                                 return_kv=True))
+        self._extend = jax.jit(
+            lambda p, b, pkv: prefill_extend(cfg, fkv, p, b, pkv,
+                                             max_len=max_len,
+                                             state_dtype=state_dtype,
+                                             mesh=mesh))
         self._step = jax.jit(
             lambda p, s, t: serve_step(cfg, fkv, p, s, t, mesh=mesh,
                                        collect_stats=True))
+        self._can_extend = supports_kv_extend(cfg)
+        self.prefix_cache = (RadixPrefixCache(prefix_cache_tokens)
+                             if prefix_cache_tokens > 0 and self._can_extend
+                             else None)
+        self._pool: Optional[SlotPool] = None
+        self.last_metrics: Optional[EngineMetrics] = None
 
-    # -- batched generation --------------------------------------------
+    # ------------------------------------------------------------------
+    # scheduler backend protocol
+    # ------------------------------------------------------------------
+    @property
+    def page_block_bytes(self) -> int:
+        """Bytes of one (kv-head, page) K+V block — the recall transfer unit."""
+        itemsize = jnp.dtype(self.state_dtype).itemsize
+        return 2 * self.fkv.page_size * self.cfg.d_head * itemsize
+
+    def make_slot_pool(self, num_slots: int) -> SlotPool:
+        return SlotPool(self.cfg, self.fkv, num_slots, self.max_len,
+                        self.state_dtype)
+
+    def step(self, state, tokens):
+        return self._step(self.params, state, jnp.asarray(tokens))
+
+    def sample(self, logits, key):
+        return sample(logits, self.sampler, key)
+
+    def _pad_prompt(self, tokens: np.ndarray) -> np.ndarray:
+        b = self.prefill_bucket
+        padded_len = max(b, -(-len(tokens) // b) * b)
+        out = np.full((padded_len,), self.pad_token, np.int32)
+        out[padded_len - len(tokens):] = tokens
+        return out
+
+    def prefill_one(self, req: Request):
+        """Prefill one request (B=1), via the prefix cache when possible.
+
+        Returns (last-token logits (1, V), B=1 decode state,
+        prefix_hit_tokens, padded_prompt_tokens)."""
+        padded = self._pad_prompt(np.asarray(req.tokens, np.int32))
+        assert len(padded) + req.max_new_tokens <= self.max_len, (
+            f"request {req.uid}: padded prompt {len(padded)} + "
+            f"{req.max_new_tokens} new tokens exceeds max_len {self.max_len}")
+        seq = tuple(int(t) for t in padded)
+        b = self.prefill_bucket
+        if self.prefix_cache is not None:
+            matched, payload = self.prefix_cache.match(seq)
+            # shrink the reused span so the suffix is an exact bucket multiple
+            suffix = max(b, -(-(len(seq) - matched) // b) * b)
+            tp = len(seq) - suffix
+            if tp >= max(b, self.fkv.page_size):   # at least one page reused
+                prefix_flat = [a[:tp] for a in payload]
+                ptree = self._flat_to_prefix_tree(prefix_flat)
+                suf = jnp.asarray(np.asarray(seq[tp:], np.int32)[None])
+                logits, state, suf_kv = self._extend(
+                    self.params, {"tokens": suf}, ptree)
+                full = [np.concatenate([p, s], axis=0) for p, s in
+                        zip(prefix_flat, self._kv_tree_to_flat(suf_kv))]
+                self.prefix_cache.insert(seq, full)
+                return logits, state, tp, len(seq)
+
+        batch = {"tokens": jnp.asarray(padded[None])}
+        if self.cfg.frontend is not None:
+            fe = (req.frontend if req.frontend is not None
+                  else np.zeros((self.cfg.n_frontend_tokens, self.cfg.d_model),
+                                np.float32))
+            batch["frontend"] = jnp.asarray(fe[None])
+        if self.prefix_cache is not None:
+            logits, state, kv = self._prefill_kv(self.params, batch)
+            self.prefix_cache.insert(seq, self._kv_tree_to_flat(kv))
+        else:
+            logits, state = self._prefill(self.params, batch)
+        return logits, state, 0, len(seq)
+
+    # -- prefix-cache payload <-> model pytree conversions --------------
+    # Flat payload layout: [k, v] per layer, prelude first, then pattern
+    # positions period-major; every array (T, n_kv, d_head) with token axis 0
+    # (the axis the radix trie slices).
+    def _kv_tree_to_flat(self, kvtree) -> List[np.ndarray]:
+        flat: List[np.ndarray] = []
+        for kvp in kvtree["prelude"]:
+            flat += [np.asarray(kvp[0][0]), np.asarray(kvp[1][0])]
+        for k, v in kvtree["pattern"]:
+            k, v = np.asarray(k), np.asarray(v)     # (n_periods, 1, T, kv, d)
+            for j in range(k.shape[0]):
+                flat += [k[j, 0], v[j, 0]]
+        return flat
+
+    def _flat_to_prefix_tree(self, flat: List[np.ndarray]):
+        cfg = self.cfg
+        i = 0
+        pre = []
+        for _ in cfg.prelude:
+            pre.append((jnp.asarray(flat[i][None]),
+                        jnp.asarray(flat[i + 1][None])))
+            i += 2
+        pat = []
+        for _ in cfg.pattern:
+            ks = np.stack(flat[i: i + 2 * cfg.n_periods: 2])
+            vs = np.stack(flat[i + 1: i + 2 * cfg.n_periods: 2])
+            i += 2 * cfg.n_periods
+            pat.append((jnp.asarray(ks[:, None]), jnp.asarray(vs[:, None])))
+        return {"prelude": tuple(pre), "pattern": tuple(pat)}
+
+    # ------------------------------------------------------------------
+    # generation entry point
+    # ------------------------------------------------------------------
     def generate(self, requests: List[Request], seed: int = 0) -> List[Completion]:
+        if self.scheduler == "continuous":
+            return self._generate_continuous(requests, seed)
+        t0 = time.perf_counter()
         out: List[Completion] = []
         for i in range(0, len(requests), self.batch_size):
             out.extend(self._generate_batch(requests[i: i + self.batch_size],
                                             seed + i))
+        em = EngineMetrics(num_slots=self.batch_size, scheduler="static")
+        em.wall_s = time.perf_counter() - t0
+        em.requests = [RequestMetrics(uid=c.uid, prompt_tokens=len(r.tokens),
+                                      max_new_tokens=r.max_new_tokens,
+                                      new_tokens=len(c.tokens),
+                                      prefill_s=c.prefill_s,
+                                      decode_s=c.decode_s, finish_t=em.wall_s)
+                       for r, c in zip(requests, out)]
+        self.last_metrics = em
         return out
 
+    def _generate_continuous(self, requests, seed):
+        if self._pool is None:
+            self._pool = self.make_slot_pool(self.batch_size)
+        else:
+            self._pool.reset_all()
+        sched = ContinuousScheduler(self, self._pool)
+        tracked, em = sched.run(requests, seed)
+        if self.prefix_cache is not None:
+            em.prefix_cache = self.prefix_cache.stats()
+        self.last_metrics = em
+        return [Completion(uid=tr.req.uid, tokens=tr.tokens,
+                           prefill_s=tr.prefill_s, decode_s=tr.decode_s,
+                           steps=max(len(tr.tokens) - 1, 0),
+                           stats=_request_stats(tr.agg), metrics=tr.metrics)
+                for tr in tracked]
+
+    # -- static chunked fallback ---------------------------------------
     def _generate_batch(self, reqs: List[Request], seed: int) -> List[Completion]:
         cfg = self.cfg
         B = len(reqs)
@@ -85,29 +258,45 @@ class ServeEngine:
         key = jax.random.PRNGKey(seed)
         max_new = max(r.max_new_tokens for r in reqs)
         gen = [[] for _ in reqs]
-        agg = {"corrected": 0.0, "kv_heads": 0.0, "sync_pages": 0.0,
-               "async_pages": 0.0, "sim_sum": 0.0, "sim_cnt": 0.0}
-        t0 = time.perf_counter()
+        # per-request stats: finished rows are masked out of the aggregation
+        # (they still ride the lockstep batch — that cost is what the
+        # continuous scheduler removes — but they no longer pollute stats)
+        aggs = [{k: 0.0 for k in ("corrected", "kv_heads", "sync_pages",
+                                  "async_pages", "sim_sum", "sim_cnt")}
+                for _ in reqs]
+        decode_ss = [0.0 for _ in reqs]
         cur = sample(logits, self.sampler, key)
-        steps = 0
+        done = [r.max_new_tokens <= 0 for r in reqs]
         for step in range(max_new):
             for i, r in enumerate(reqs):
-                if step < r.max_new_tokens:
-                    gen[i].append(int(cur[i]))
+                if done[i]:
+                    continue
+                tok = int(cur[i])
+                gen[i].append(tok)
+                if len(gen[i]) >= r.max_new_tokens or \
+                        (r.eos_token is not None and tok == r.eos_token):
+                    done[i] = True
+            if all(done):
+                break                # no row needs another step: stop
+            ts = time.perf_counter()
             logits, state, stats = self._step(self.params, state, cur[:, None])
-            steps += 1
-            for k in agg:
-                agg[k] += float(np.sum(np.asarray(stats[k])))
+            stats_np = {k: np.asarray(v) for k, v in stats.items()
+                        if k in aggs[0]}
+            dt = time.perf_counter() - ts
+            for i in range(B):
+                # row i needs this step iff it still appends a token next
+                # iteration; a finished row's decode cost and retrieval
+                # traffic are excluded from its completion record
+                if not done[i]:
+                    decode_ss[i] += dt
+                    for k in aggs[i]:
+                        aggs[i][k] += float(stats_np[k][i])
             key = jax.random.fold_in(key, step)
             cur = sample(logits, self.sampler, key)
         jax.block_until_ready(logits)
-        decode_s = time.perf_counter() - t0
 
-        stats = dict(agg)
-        if agg["kv_heads"] > 0:
-            stats["correction_rate"] = agg["corrected"] / agg["kv_heads"]
-            stats["mean_similarity"] = (agg["sim_sum"] / agg["sim_cnt"]
-                                        if agg["sim_cnt"] else 0.0)
         return [Completion(uid=r.uid, tokens=gen[i], prefill_s=prefill_s,
-                           decode_s=decode_s, steps=steps, stats=stats)
+                           decode_s=decode_ss[i],
+                           steps=max(len(gen[i]) - 1, 0),
+                           stats=_request_stats(aggs[i]))
                 for i, r in enumerate(reqs)]

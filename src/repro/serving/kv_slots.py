@@ -1,0 +1,121 @@
+"""Paged KV slot pool: maps logical requests onto physical batch slots.
+
+The FreeKV decode state is one pytree with a fixed batch dimension (the slot
+count) — ``core/paging.py`` page tables, window rings, selection buffers and
+per-row lengths. A jitted ``serve_step`` over that state never recompiles as
+requests come and go; admission and completion are per-slot functional
+updates:
+
+  * ``insert(src_state, slot)`` splices a freshly prefilled B=1 state into a
+    physical slot (prelude layers batch on axis 0, period-stacked pattern
+    layers on axis 1, ``pos`` on axis 0 — see ``paging.slot_write_leaf``).
+  * ``free(slot)`` returns the slot and marks it dirty; the reset to the
+    empty template is LAZY (``flush_resets``, called by the scheduler right
+    before a decode step) so a slot refilled at the same step boundary — the
+    common case — pays one splice, not two. Slots that stay idle are reset
+    once so their ring/page writes stay bounded until the next refill.
+
+The slot index is a traced scalar, so one compiled insert serves every slot.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Set
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import paging
+from repro.models.model import init_decode_state
+
+
+def _splice(dst, src, slot):
+    out = dict(dst)
+    out["prelude"] = tuple(
+        jax.tree.map(lambda a, b: paging.slot_write_leaf(a, b, slot, axis=0),
+                     d, s)
+        for d, s in zip(dst["prelude"], src["prelude"]))
+    out["pattern"] = tuple(
+        jax.tree.map(lambda a, b: paging.slot_write_leaf(a, b, slot, axis=1),
+                     d, s)
+        for d, s in zip(dst["pattern"], src["pattern"]))
+    out["pos"] = paging.slot_write_leaf(dst["pos"], src["pos"], slot, axis=0)
+    return out
+
+
+def _extract(state, slot):
+    return {
+        "prelude": tuple(
+            jax.tree.map(lambda a: paging.slot_read_leaf(a, slot, axis=0), d)
+            for d in state["prelude"]),
+        "pattern": tuple(
+            jax.tree.map(lambda a: paging.slot_read_leaf(a, slot, axis=1), d)
+            for d in state["pattern"]),
+        "pos": paging.slot_read_leaf(state["pos"], slot, axis=0),
+    }
+
+
+class SlotPool:
+    """Fixed-capacity pool of physical batch slots over one decode state."""
+
+    def __init__(self, cfg, fkv, num_slots: int, max_len: int,
+                 state_dtype=jnp.float32):
+        self.cfg, self.fkv = cfg, fkv
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self._init_full = jax.jit(
+            lambda: init_decode_state(cfg, fkv, num_slots, max_len,
+                                      state_dtype))
+        self._template = jax.jit(
+            lambda: init_decode_state(cfg, fkv, 1, max_len, state_dtype))()
+        self._splice = jax.jit(_splice)
+        self._extract = jax.jit(_extract)
+        self.state = self._init_full()
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self._dirty: Set[int] = set()
+        self.owner: List[Optional[int]] = [None] * num_slots
+        self.allocs = 0
+
+    # -- bookkeeping ---------------------------------------------------
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return [s for s, o in enumerate(self.owner) if o is not None]
+
+    def alloc(self, owner_uid: int) -> int:
+        slot = self._free.pop()
+        self._dirty.discard(slot)       # insert() will overwrite every leaf
+        self.owner[slot] = owner_uid
+        self.allocs += 1
+        return slot
+
+    def free(self, slot: int):
+        assert self.owner[slot] is not None, f"slot {slot} already free"
+        self.owner[slot] = None
+        self._free.append(slot)
+        self._dirty.add(slot)
+
+    def flush_resets(self):
+        """Reset slots freed since the last flush that were not refilled —
+        call before stepping so idle slots carry the empty template."""
+        for slot in sorted(self._dirty):
+            self.state = self._splice(self.state, self._template,
+                                      jnp.int32(slot))
+        self._dirty.clear()
+
+    # -- state surgery -------------------------------------------------
+    def insert(self, src_state, slot: int):
+        """Splice a B=1 prefilled decode state into physical slot ``slot``."""
+        self.state = self._splice(self.state, src_state, jnp.int32(slot))
+
+    def extract(self, slot: int):
+        """Read one slot back out as a B=1 state (testing / migration)."""
+        return self._extract(self.state, jnp.int32(slot))
+
+    def reset_all(self):
+        self.state = self._init_full()
+        self._free = list(range(self.num_slots - 1, -1, -1))
+        self._dirty = set()
+        self.owner = [None] * self.num_slots

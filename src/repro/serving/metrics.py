@@ -1,0 +1,114 @@
+"""Serving telemetry: per-request lifecycle timings + engine-level counters.
+
+All timestamps are ``time.perf_counter()`` values relative to the scheduler
+run's start; derived quantities (queue wait, TTFT, inter-token latency) are
+exposed as properties so callers never recompute them inconsistently.
+
+``EngineMetrics.summary()`` is the single dict consumed by
+``benchmarks/serving_throughput.py`` and the serving launcher.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class RequestMetrics:
+    uid: int
+    prompt_tokens: int = 0            # raw prompt length
+    padded_prompt_tokens: int = 0     # after bucket padding
+    prefix_hit_tokens: int = 0        # prompt tokens served from the prefix cache
+    max_new_tokens: int = 0
+    enqueue_t: float = 0.0
+    prefill_start_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    finish_step: Optional[int] = None  # engine step index at completion
+    new_tokens: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        if self.prefill_start_t is None:
+            return None
+        return self.prefill_start_t - self.enqueue_t
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.enqueue_t
+
+    @property
+    def itl_s(self) -> Optional[float]:
+        """Mean inter-token latency after the first token."""
+        if self.finish_t is None or self.first_token_t is None \
+                or self.new_tokens < 2:
+            return None
+        return (self.finish_t - self.first_token_t) / (self.new_tokens - 1)
+
+
+def _mean(xs: List[float]) -> float:
+    return sum(xs) / len(xs) if xs else 0.0
+
+
+@dataclass
+class EngineMetrics:
+    """Engine-level aggregation across one scheduler run."""
+    num_slots: int = 0
+    requests: List[RequestMetrics] = field(default_factory=list)
+    steps: int = 0
+    active_slot_steps: int = 0        # sum over steps of active slots
+    wall_s: float = 0.0
+    # retrieval traffic (counts of (kv-head, page) blocks; see core/retrieval)
+    sync_pages: float = 0.0
+    async_pages: float = 0.0
+    page_block_bytes: int = 0         # bytes of one (kv-head, page) K+V block
+    prefix_cache: Dict = field(default_factory=dict)
+    scheduler: str = "continuous"
+
+    def record_step(self, n_active: int):
+        self.steps += 1
+        self.active_slot_steps += n_active
+
+    @property
+    def slot_occupancy(self) -> float:
+        total = self.steps * self.num_slots
+        return self.active_slot_steps / total if total else 0.0
+
+    @property
+    def generated_tokens(self) -> int:
+        return sum(r.new_tokens for r in self.requests)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.generated_tokens / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def recall_bytes(self) -> Dict[str, float]:
+        return {"sync": self.sync_pages * self.page_block_bytes,
+                "async": self.async_pages * self.page_block_bytes}
+
+    def summary(self) -> dict:
+        done = [r for r in self.requests if r.finish_t is not None]
+        return {
+            "scheduler": self.scheduler,
+            "requests": len(self.requests),
+            "completed": len(done),
+            "generated_tokens": self.generated_tokens,
+            "wall_s": self.wall_s,
+            "tokens_per_s": self.tokens_per_s,
+            "steps": self.steps,
+            "slot_occupancy": self.slot_occupancy,
+            "queue_wait_s_mean": _mean([r.queue_wait_s for r in done
+                                        if r.queue_wait_s is not None]),
+            "ttft_s_mean": _mean([r.ttft_s for r in done
+                                  if r.ttft_s is not None]),
+            "itl_s_mean": _mean([r.itl_s for r in done
+                                 if r.itl_s is not None]),
+            "recall_bytes_sync": self.recall_bytes["sync"],
+            "recall_bytes_async": self.recall_bytes["async"],
+            "prefix_cache": dict(self.prefix_cache),
+        }

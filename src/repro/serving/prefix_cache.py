@@ -1,0 +1,233 @@
+"""Radix-trie prefix cache: token-ID-keyed reuse of prefilled KV.
+
+A request whose prompt shares a prefix with a previously prefilled prompt can
+skip the transformer forward for the matched span — the engine re-runs only the
+suffix via ``model.prefill_extend`` and rebuilds the paged decode state from
+the cached per-layer K/V (see docs/serving.md).
+
+The trie is engine-agnostic: payloads are lists of arrays whose axis 0 is the
+token axis (here: one (T, n_kv, d_head) K and V array per attention layer).
+Each trie node owns a token *segment* plus the payload slice covering it, so
+shared prefixes are stored once (path compression) and a lookup is O(L).
+Matching may stop inside a segment (partial-page / partial-segment match); the
+node is not split on match — only inserts split nodes.
+
+Eviction is LRU over leaves with a token-count capacity, mirroring
+prompt-cache-engine's LRU/TTL design (SNIPPETS.md) at page granularity-free
+token resolution.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Payload = List[np.ndarray]          # per-layer arrays, token axis 0
+
+
+def _slice_payload(payload: Payload, start: int, stop: int) -> Payload:
+    return [np.ascontiguousarray(a[start:stop]) for a in payload]
+
+
+def _concat_payloads(parts: Sequence[Payload]) -> Payload:
+    if not parts:
+        return []
+    return [np.concatenate([p[i] for p in parts], axis=0)
+            for i in range(len(parts[0]))]
+
+
+def _payload_nbytes(payload: Payload) -> int:
+    return sum(int(a.nbytes) for a in payload)
+
+
+class _Node:
+    __slots__ = ("tokens", "payload", "children", "parent", "last_used")
+
+    def __init__(self, tokens: Tuple[int, ...], payload: Optional[Payload],
+                 parent: Optional["_Node"]):
+        self.tokens = tokens
+        self.payload = payload                    # None only for the root
+        self.children: Dict[int, _Node] = {}      # first token -> child
+        self.parent = parent
+        self.last_used = 0
+
+    def is_leaf(self) -> bool:
+        return not self.children
+
+
+class RadixPrefixCache:
+    """LRU-evicted radix trie over token IDs with KV payloads.
+
+    capacity_tokens bounds the total number of cached tokens (sum of segment
+    lengths); 0 disables the cache entirely (every match misses, inserts are
+    dropped) so callers can keep one code path.
+    """
+
+    def __init__(self, capacity_tokens: int):
+        self.capacity_tokens = int(capacity_tokens)
+        self.root = _Node((), None, None)
+        self._clock = 0
+        self.total_tokens = 0
+        # telemetry, consumed by serving.metrics
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0
+        self.lookup_tokens = 0
+        self.insert_count = 0
+        self.evictions = 0
+
+    # -- internals -----------------------------------------------------
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _touch(self, node: _Node):
+        t = self._tick()
+        while node is not None:
+            node.last_used = t
+            node = node.parent
+
+    @staticmethod
+    def _common_len(a: Sequence[int], b: Sequence[int]) -> int:
+        n = min(len(a), len(b))
+        i = 0
+        while i < n and a[i] == b[i]:
+            i += 1
+        return i
+
+    def _split(self, node: _Node, at: int) -> _Node:
+        """Split ``node``'s segment at offset ``at``; returns the upper half."""
+        upper = _Node(node.tokens[:at], _slice_payload(node.payload, 0, at),
+                      node.parent)
+        upper.last_used = node.last_used
+        upper.children[node.tokens[at]] = node
+        node.parent.children[node.tokens[0]] = upper
+        node.tokens = node.tokens[at:]
+        node.payload = _slice_payload(node.payload, at,
+                                      at + len(node.tokens))
+        node.parent = upper
+        return upper
+
+    # -- public API ----------------------------------------------------
+    def match(self, tokens: Sequence[int]) -> Tuple[int, Optional[Payload]]:
+        """Longest cached prefix of ``tokens``.
+
+        Returns (n_matched, payload covering the matched span) — payload is
+        None on a zero-length match. The matched path (and, for a partial
+        segment match, the containing node) is LRU-touched.
+        """
+        tokens = tuple(tokens)
+        self.lookup_tokens += len(tokens)
+        node, off, parts = self.root, 0, []
+        while off < len(tokens):
+            child = node.children.get(tokens[off])
+            if child is None:
+                break
+            n = self._common_len(child.tokens, tokens[off:])
+            if n == 0:
+                break
+            parts.append(_slice_payload(child.payload, 0, n)
+                         if n < len(child.tokens) else child.payload)
+            off += n
+            node = child
+            if n < len(child.tokens):
+                break
+        self._touch(node)
+        if off == 0:
+            self.misses += 1
+            return 0, None
+        self.hits += 1
+        self.hit_tokens += off
+        return off, _concat_payloads(parts)
+
+    def insert(self, tokens: Sequence[int], payload: Payload) -> int:
+        """Insert ``tokens`` with its full-span payload; returns the number of
+        newly stored tokens (already-cached prefix spans are deduplicated)."""
+        if self.capacity_tokens <= 0 or not len(tokens):
+            return 0
+        tokens = tuple(tokens)
+        node, off = self.root, 0
+        while off < len(tokens):
+            child = node.children.get(tokens[off])
+            if child is None:
+                break
+            n = self._common_len(child.tokens, tokens[off:])
+            if n < len(child.tokens):
+                if n == 0:
+                    break
+                child = self._split(child, n)
+            node, off = child, off + n
+        added = len(tokens) - off
+        if added:
+            leaf = _Node(tokens[off:],
+                         _slice_payload(payload, off, len(tokens)), node)
+            node.children[tokens[off]] = leaf
+            node = leaf
+            self.total_tokens += added
+        self._touch(node)
+        self.insert_count += 1
+        self._evict_to_capacity()
+        return added
+
+    def _evict_to_capacity(self):
+        # One trie walk per *generation* of leaves (not per victim): evict
+        # leaves in LRU order until under capacity; parents that became
+        # leaves are picked up by the next walk (rarely more than one).
+        while self.total_tokens > self.capacity_tokens:
+            leaves = self._leaves()
+            if not leaves:
+                return
+            leaves.sort(key=lambda n: n.last_used)
+            for victim in leaves:
+                if self.total_tokens <= self.capacity_tokens:
+                    break
+                del victim.parent.children[victim.tokens[0]]
+                self.total_tokens -= len(victim.tokens)
+                self.evictions += 1
+
+    def _leaves(self) -> List[_Node]:
+        out, stack = [], [self.root]
+        while stack:
+            n = stack.pop()
+            if n is not self.root and n.is_leaf():
+                out.append(n)
+            stack.extend(n.children.values())
+        return out
+
+    # -- accounting ----------------------------------------------------
+    def nbytes(self) -> int:
+        total, stack = 0, [self.root]
+        while stack:
+            n = stack.pop()
+            if n.payload is not None:
+                total += _payload_nbytes(n.payload)
+            stack.extend(n.children.values())
+        return total
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    @property
+    def hit_token_rate(self) -> float:
+        return self.hit_tokens / self.lookup_tokens if self.lookup_tokens else 0.0
+
+    def clear(self):
+        """Drop all cached entries AND reset counters — stats after a clear
+        describe only post-clear traffic (benchmarks rely on this)."""
+        self.root = _Node((), None, None)
+        self.total_tokens = 0
+        self.hits = self.misses = 0
+        self.hit_tokens = self.lookup_tokens = 0
+        self.insert_count = self.evictions = 0
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "hit_tokens": self.hit_tokens,
+                "lookup_tokens": self.lookup_tokens,
+                "hit_rate": self.hit_rate,
+                "hit_token_rate": self.hit_token_rate,
+                "cached_tokens": self.total_tokens,
+                "evictions": self.evictions,
+                "nbytes": self.nbytes()}

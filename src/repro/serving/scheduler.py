@@ -1,0 +1,169 @@
+"""Continuous-batching scheduler: admission queue + per-slot request lifecycle.
+
+Requests move QUEUED -> PREFILL -> DECODE -> DONE. Slots are refilled at every
+step boundary, so a short request's completion immediately frees capacity for
+the next queued request instead of idling until the longest co-scheduled
+request drains (the static chunked engine's behavior). Finished slots stop
+being stepped the moment they drain: the slot is reset and refilled, and no
+finished row ever contributes to the aggregated retrieval statistics.
+
+The scheduler is backend-agnostic: it drives any object exposing
+
+    prefill_one(request) -> (logits (1, V), B=1 decode state, prefix_hit_tokens,
+                             padded_prompt_tokens)
+    step(state, tokens (B, 1)) -> (logits (B, V), state, stats)
+    sample(logits, key) -> tokens (B,)
+    make_slot_pool(num_slots) -> kv_slots.SlotPool
+    page_block_bytes -> int
+
+(``ServeEngine`` is the production backend; tests inject lightweight fakes.)
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.serving.metrics import EngineMetrics, RequestMetrics
+
+# request lifecycle states
+QUEUED, PREFILL, DECODE, DONE = "queued", "prefill", "decode", "done"
+
+_STAT_KEYS = ("corrected", "kv_heads", "sync_pages", "async_pages",
+              "sim_sum", "sim_cnt")
+
+
+@dataclass
+class _Tracked:
+    req: object                       # engine.Request (duck-typed)
+    order: int                        # position in the submitted batch
+    metrics: RequestMetrics
+    state: str = QUEUED
+    slot: int = -1
+    tokens: List[int] = field(default_factory=list)
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    agg: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in _STAT_KEYS})
+
+    def finished(self) -> bool:
+        if len(self.tokens) >= self.req.max_new_tokens:
+            return True
+        eos = getattr(self.req, "eos_token", None)
+        return bool(self.tokens) and eos is not None and self.tokens[-1] == eos
+
+
+def _request_stats(agg: Dict[str, float]) -> dict:
+    stats = dict(agg)
+    if agg["kv_heads"] > 0:
+        stats["correction_rate"] = agg["corrected"] / agg["kv_heads"]
+        stats["mean_similarity"] = (agg["sim_sum"] / agg["sim_cnt"]
+                                    if agg["sim_cnt"] else 0.0)
+    return stats
+
+
+class ContinuousScheduler:
+    """Drives one run of requests to completion over a fixed slot pool."""
+
+    def __init__(self, backend, pool):
+        self.backend = backend
+        self.pool = pool
+
+    def run(self, requests, seed: int = 0):
+        """Returns (tracked records in submission order, EngineMetrics)."""
+        backend, pool = self.backend, self.pool
+        t0 = time.perf_counter()
+        now = lambda: time.perf_counter() - t0  # noqa: E731
+
+        queue: deque = deque()
+        for i, r in enumerate(requests):
+            rm = RequestMetrics(uid=r.uid, prompt_tokens=len(r.tokens),
+                                max_new_tokens=r.max_new_tokens,
+                                enqueue_t=now())
+            queue.append(_Tracked(req=r, order=i, metrics=rm))
+
+        em = EngineMetrics(num_slots=pool.num_slots, scheduler="continuous",
+                           page_block_bytes=backend.page_block_bytes)
+        active: Dict[int, _Tracked] = {}
+        cur = np.zeros((pool.num_slots,), np.int32)
+        key = jax.random.PRNGKey(seed)
+        done: List[_Tracked] = []
+        step_idx = 0
+
+        def finish(tr: _Tracked, slot: Optional[int]):
+            tr.state = DONE
+            tr.metrics.finish_t = now()
+            tr.metrics.finish_step = step_idx
+            tr.metrics.new_tokens = len(tr.tokens)
+            tr.metrics.prefill_s = tr.prefill_s
+            tr.metrics.decode_s = tr.decode_s
+            done.append(tr)
+            if slot is not None:
+                pool.free(slot)
+
+        while queue or active:
+            # -- admission: refill freed slots at the step boundary --------
+            while queue and pool.free_count:
+                tr = queue.popleft()
+                if tr.req.max_new_tokens <= 0:
+                    finish(tr, None)
+                    continue
+                tr.state = PREFILL
+                tr.metrics.prefill_start_t = now()
+                slot = pool.alloc(tr.req.uid)
+                tp = time.perf_counter()
+                logits1, state1, hit, padded = backend.prefill_one(tr.req)
+                pool.insert(state1, slot)
+                pkey = jax.random.fold_in(
+                    jax.random.fold_in(key, 0x5EED), tr.req.uid)
+                tok = int(np.asarray(backend.sample(logits1, pkey))[0])
+                tr.prefill_s = time.perf_counter() - tp
+                tr.metrics.first_token_t = now()
+                tr.metrics.prefix_hit_tokens = hit
+                tr.metrics.padded_prompt_tokens = padded
+                tr.tokens.append(tok)
+                tr.state = DECODE
+                tr.slot = slot
+                if tr.finished():           # max_new_tokens == 1 or instant EOS
+                    finish(tr, slot)
+                else:
+                    active[slot] = tr
+                    cur[slot] = tok
+            if not active:
+                continue
+
+            # -- one decode step over the full slot batch ------------------
+            pool.flush_resets()          # lazily reset freed-but-idle slots
+            ts = time.perf_counter()
+            logits, new_state, stats = backend.step(pool.state, cur[:, None])
+            key = jax.random.fold_in(key, step_idx)
+            toks = np.asarray(backend.sample(logits, key))
+            stats_np = {k: np.asarray(stats[k]) for k in _STAT_KEYS}
+            dt = time.perf_counter() - ts
+            pool.state = new_state
+            em.record_step(len(active))
+            em.sync_pages += float(
+                sum(stats_np["sync_pages"][s] for s in active))
+            em.async_pages += float(
+                sum(stats_np["async_pages"][s] for s in active))
+
+            for slot, tr in list(active.items()):
+                tr.decode_s += dt
+                for k in _STAT_KEYS:
+                    tr.agg[k] += float(stats_np[k][slot])
+                tok = int(toks[slot])
+                tr.tokens.append(tok)
+                cur[slot] = tok
+                if tr.finished():
+                    del active[slot]
+                    finish(tr, slot)
+            step_idx += 1
+
+        em.wall_s = now()
+        done.sort(key=lambda tr: tr.order)
+        em.requests = [tr.metrics for tr in done]
+        return done, em

@@ -1,0 +1,125 @@
+"""Radix-trie prefix cache: insert/match/evict properties + engine integration."""
+import numpy as np
+
+from repro.serving.prefix_cache import RadixPrefixCache
+
+
+def _payload(tokens, n_arrays=2, width=3):
+    """Deterministic per-token payload so slices are checkable: array i holds
+    value (token * 10 + i) replicated across the feature axis."""
+    t = np.asarray(tokens, np.int32)
+    return [np.repeat((t * 10 + i)[:, None], width, axis=1).astype(np.float32)
+            for i in range(n_arrays)]
+
+
+def _check(payload, tokens):
+    ref = _payload(tokens)
+    assert len(payload) == len(ref)
+    for a, b in zip(payload, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_insert_then_exact_match():
+    c = RadixPrefixCache(1 << 20)
+    seq = (5, 6, 7, 8)
+    c.insert(seq, _payload(seq))
+    n, payload = c.match(seq)
+    assert n == 4
+    _check(payload, seq)
+    assert c.total_tokens == 4
+
+
+def test_partial_segment_match():
+    """A match may stop mid-segment (partial-page prefix match): the node is
+    sliced, not split, and the payload covers exactly the matched span."""
+    c = RadixPrefixCache(1 << 20)
+    seq = (1, 2, 3, 4, 5, 6, 7, 8)
+    c.insert(seq, _payload(seq))
+    n, payload = c.match((1, 2, 3, 99))
+    assert n == 3
+    _check(payload, (1, 2, 3))
+    # no structural change from matching
+    assert c.total_tokens == 8
+
+
+def test_shared_prefix_dedup_and_split():
+    c = RadixPrefixCache(1 << 20)
+    a = (1, 2, 3, 4, 5, 6)
+    b = (1, 2, 3, 9, 9, 9)
+    c.insert(a, _payload(a))
+    c.insert(b, _payload(b))
+    # shared prefix (1,2,3) stored once: 6 + 3 new tokens, not 12
+    assert c.total_tokens == 9
+    for seq in (a, b):
+        n, payload = c.match(seq)
+        assert n == 6
+        _check(payload, seq)
+
+
+def test_match_across_split_nodes_concatenates_payload():
+    c = RadixPrefixCache(1 << 20)
+    a = (1, 2, 3, 4)
+    b = (1, 2, 5, 6)
+    c.insert(a, _payload(a))
+    c.insert(b, _payload(b))           # splits (1,2,3,4) into (1,2)+(3,4)
+    n, payload = c.match((1, 2, 3, 4, 7))
+    assert n == 4
+    _check(payload, a)
+
+
+def test_zero_capacity_disables():
+    c = RadixPrefixCache(0)
+    assert c.insert((1, 2, 3), _payload((1, 2, 3))) == 0
+    n, payload = c.match((1, 2, 3))
+    assert n == 0 and payload is None
+
+
+def test_lru_eviction_under_capacity():
+    c = RadixPrefixCache(8)
+    a = (1, 2, 3, 4)
+    b = (5, 6, 7, 8)
+    c.insert(a, _payload(a))
+    c.insert(b, _payload(b))
+    assert c.total_tokens == 8
+    c.match(a)                          # a is now most recently used
+    d = (9, 10, 11, 12)
+    c.insert(d, _payload(d))            # over capacity -> evict LRU leaf (b)
+    assert c.total_tokens == 8
+    assert c.evictions == 1
+    assert c.match(b)[0] == 0           # b evicted
+    assert c.match(a)[0] == 4           # a retained
+    assert c.match(d)[0] == 4
+
+
+def test_eviction_prefers_leaves():
+    """Evicting a leaf must not take a shared ancestor with it."""
+    c = RadixPrefixCache(7)
+    a = (1, 2, 3, 4, 5)
+    b = (1, 2, 3, 8, 9)                 # shares (1,2,3) -> 5 + 2 = 7 tokens
+    c.insert(a, _payload(a))
+    c.insert(b, _payload(b))
+    assert c.total_tokens == 7
+    c.match(b)
+    e = (7, 7)
+    c.insert(e, _payload(e))            # evicts the LRU leaf (a's tail)
+    assert c.total_tokens <= 7
+    n, payload = c.match(b)             # b's full path still intact
+    assert n == 5
+    _check(payload, b)
+
+
+def test_accounting_stats():
+    c = RadixPrefixCache(1 << 20)
+    seq = tuple(range(16))
+    c.insert(seq, _payload(seq))
+    c.match(seq)
+    c.match((99,))
+    s = c.stats()
+    assert s["hits"] == 1 and s["misses"] == 1
+    assert s["hit_tokens"] == 16
+    assert s["cached_tokens"] == 16
+    assert s["nbytes"] == sum(a.nbytes for a in _payload(seq))
+    c.clear()
+    assert c.total_tokens == 0
+    assert c.hits == 0 and c.misses == 0 and c.hit_tokens == 0
+    assert c.match(seq)[0] == 0

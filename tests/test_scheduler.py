@@ -1,0 +1,184 @@
+"""Continuous-batching scheduler + KV slot pool: reuse, ordering, consistency."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import FreeKVConfig
+from repro.models.model import init_params
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.kv_slots import SlotPool
+from repro.serving.sampling import SamplerConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm-360m-smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    fkv = FreeKVConfig(method="freekv", page_size=8, budget=64, n_sink=8,
+                       n_window=8, tau=0.8)
+    return cfg, fkv, params
+
+
+def _prompt(cfg, n, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab_size, n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# slot pool
+# ---------------------------------------------------------------------------
+def test_slot_pool_insert_extract_roundtrip(setup):
+    cfg, fkv, _ = setup
+    pool = SlotPool(cfg, fkv, num_slots=3, max_len=128)
+    src = pool._template
+    # stamp a recognizable length into the B=1 source state
+    src = jax.tree.map(lambda a: a, src)
+    src["pos"] = src["pos"] + 7
+    slot = pool.alloc(owner_uid=42)
+    pool.insert(src, slot)
+    got = pool.extract(slot)
+    assert int(got["pos"][0]) == 7
+    other = pool.extract((slot + 1) % 3)
+    assert int(other["pos"][0]) == 0            # neighbors untouched
+    pool.free(slot)
+    assert pool.free_count == 3
+    pool.flush_resets()                         # lazy reset applies here
+    assert int(pool.extract(slot)["pos"][0]) == 0
+
+
+def test_slot_pool_reuse_across_request_waves(setup):
+    """More requests than slots: every slot is recycled and all complete."""
+    cfg, fkv, params = setup
+    eng = ServeEngine(cfg, fkv, params, max_len=256, batch_size=2,
+                      sampler=SamplerConfig(temperature=0.0),
+                      prefill_bucket=64)       # ragged prompts, one shape
+    reqs = [Request(uid=i, tokens=_prompt(cfg, 40 + i, seed=i),
+                    max_new_tokens=3) for i in range(5)]
+    outs = eng.generate(reqs)
+    assert [o.uid for o in outs] == [0, 1, 2, 3, 4]
+    assert all(len(o.tokens) == 3 for o in outs)
+    assert eng._pool.allocs == 5 > eng._pool.num_slots
+    assert eng._pool.free_count == 2            # all slots returned
+    em = eng.last_metrics
+    assert em.steps > 0 and 0.0 < em.slot_occupancy <= 1.0
+    assert all(r.finish_t is not None for r in em.requests)
+
+
+# ---------------------------------------------------------------------------
+# scheduler end-to-end ordering
+# ---------------------------------------------------------------------------
+def test_short_requests_finish_before_long(setup):
+    """A short request co-scheduled with a long one completes first and its
+    freed slot admits a queued request before the long request drains."""
+    cfg, fkv, params = setup
+    eng = ServeEngine(cfg, fkv, params, max_len=256, batch_size=2,
+                      sampler=SamplerConfig(temperature=0.0))
+    long_req = Request(uid=0, tokens=_prompt(cfg, 64, 0), max_new_tokens=16)
+    short_req = Request(uid=1, tokens=_prompt(cfg, 64, 1), max_new_tokens=2)
+    queued = Request(uid=2, tokens=_prompt(cfg, 64, 2), max_new_tokens=2)
+    eng.generate([long_req, short_req, queued])
+    m = {r.uid: r for r in eng.last_metrics.requests}
+    assert m[1].finish_step < m[0].finish_step
+    assert m[2].finish_step < m[0].finish_step   # admitted into the freed slot
+    assert m[1].queue_wait_s <= m[2].queue_wait_s
+
+
+def test_finished_slots_not_stepped(setup):
+    """Engine step count tracks live work, not the longest request times
+    slots: 1 long (max_new 16) + 1 short (max_new 2) on 2 slots needs 15
+    steps, and total active-slot-steps is sum of per-request decode steps."""
+    cfg, fkv, params = setup
+    eng = ServeEngine(cfg, fkv, params, max_len=256, batch_size=2,
+                      sampler=SamplerConfig(temperature=0.0))
+    eng.generate([Request(uid=0, tokens=_prompt(cfg, 64), max_new_tokens=16),
+                  Request(uid=1, tokens=_prompt(cfg, 64), max_new_tokens=2)])
+    em = eng.last_metrics
+    assert em.steps == 15                        # long: 15 decode steps
+    assert em.active_slot_steps == 15 + 1        # short adds just 1
+
+
+def test_continuous_matches_static_greedy(setup):
+    cfg, fkv, params = setup
+    prompt = _prompt(cfg, 64, seed=3)            # bucket-aligned: no padding
+    outs = {}
+    for sched in ("continuous", "static"):
+        eng = ServeEngine(cfg, fkv, params, max_len=256, batch_size=2,
+                          sampler=SamplerConfig(temperature=0.0),
+                          scheduler=sched)
+        outs[sched] = [o.tokens for o in eng.generate(
+            [Request(uid=i, tokens=prompt, max_new_tokens=6)
+             for i in range(2)])]
+    assert outs["continuous"] == outs["static"]
+
+
+def test_eos_token_stops_both_schedulers(setup):
+    """eos_token truncates generation identically under both schedulers."""
+    cfg, fkv, params = setup
+    prompt = _prompt(cfg, 64, seed=5)
+    full = {}
+    for sched in ("continuous", "static"):
+        eng = ServeEngine(cfg, fkv, params, max_len=256, batch_size=1,
+                          sampler=SamplerConfig(temperature=0.0),
+                          scheduler=sched)
+        full[sched] = eng.generate(
+            [Request(uid=0, tokens=prompt, max_new_tokens=8)])[0].tokens
+    assert full["continuous"] == full["static"]
+    eos = full["continuous"][2]                  # greedy is deterministic
+    cut = full["continuous"].index(eos) + 1      # first occurrence wins
+    assert cut <= 3
+    for sched in ("continuous", "static"):
+        eng = ServeEngine(cfg, fkv, params, max_len=256, batch_size=1,
+                          sampler=SamplerConfig(temperature=0.0),
+                          scheduler=sched)
+        out = eng.generate([Request(uid=0, tokens=prompt, max_new_tokens=8,
+                                    eos_token=eos)])[0]
+        assert out.tokens == full[sched][:cut]   # truncated at first EOS
+        assert out.tokens[-1] == eos
+
+
+def test_static_stats_exclude_finished_rows(setup):
+    """Static fallback: a finished request's stats stop accumulating (the
+    wasted-decode fix) — its retrieval traffic is < the long request's."""
+    cfg, fkv, params = setup
+    eng = ServeEngine(cfg, fkv, params, max_len=256, batch_size=2,
+                      sampler=SamplerConfig(temperature=0.0),
+                      scheduler="static")
+    outs = eng.generate([
+        Request(uid=0, tokens=_prompt(cfg, 64), max_new_tokens=12),
+        Request(uid=1, tokens=_prompt(cfg, 64), max_new_tokens=2)])
+    long_o, short_o = outs
+    assert short_o.steps == 1 and long_o.steps == 11
+    assert short_o.stats["kv_heads"] < long_o.stats["kv_heads"]
+    assert short_o.decode_s < long_o.decode_s
+
+
+# ---------------------------------------------------------------------------
+# prefix cache through the engine
+# ---------------------------------------------------------------------------
+def test_prefix_cache_hit_preserves_greedy_output(setup):
+    cfg, fkv, params = setup
+    big = FreeKVConfig(method="freekv", page_size=8, budget=4096, n_sink=8,
+                       n_window=8, tau=0.8)
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab_size, 128).astype(np.int32)
+    tails = [rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+             for _ in range(2)]
+    prompts = [np.concatenate([shared, t]) for t in tails]
+    reqs = lambda: [Request(uid=i, tokens=p, max_new_tokens=6)
+                    for i, p in enumerate(prompts)]
+
+    ref_eng = ServeEngine(cfg, big, params, max_len=512, batch_size=1,
+                          sampler=SamplerConfig(temperature=0.0))
+    ref = [o.tokens for o in ref_eng.generate(reqs())]
+
+    eng = ServeEngine(cfg, big, params, max_len=512, batch_size=1,
+                      sampler=SamplerConfig(temperature=0.0),
+                      prefix_cache_tokens=4096)
+    outs = eng.generate(reqs())
+    assert [o.tokens for o in outs] == ref
+    hits = [o.metrics.prefix_hit_tokens for o in outs]
+    assert hits[0] == 0 and hits[1] == 128       # shared prefix reused
+    assert eng.prefix_cache.hit_tokens == 128
+    em = eng.last_metrics
+    assert em.prefix_cache["hit_rate"] > 0
