@@ -201,6 +201,17 @@ class FreeKVConfig:
                                       # max_qk, mean_qk, max_softmax
     offload: str = "sim"        # sim | host  (host = pinned_host memory kind)
     use_kernels: bool = False   # Pallas kernels (interpret on CPU) vs jnp path
+    # §4 system side: overlapped double-buffered streamed recall. When True
+    # the speculative recall for step t+1 is *staged* off the critical path
+    # (core/recall_pipeline.RecallExecutor) and only a correction top-up —
+    # pages for corrected heads not already resident in the previous buffer —
+    # blocks step t. Greedy outputs are bit-identical to the synchronous
+    # path; only the transfer schedule (and hence sync/async page counts)
+    # changes. Applies to freekv (speculative) and shadowkv (V-only delta).
+    recall_overlap: bool = True
+    # pages per DMA chunk in the double-buffered recall kernel's VMEM ring
+    # (0 = auto: min(8, n_sel)); only used when use_kernels=True
+    recall_chunk_pages: int = 0
     skip_first_layer: bool = True  # standard practice: no compression on layer 0
     # ShadowKV-like baseline
     svd_rank: int = 160

@@ -8,6 +8,16 @@ scatter (offload path, amortized per completed page) and the recall gather
 accounts transfer costs analytically (benchmarks/_common.py) — the default on
 platforms where compute on host-resident buffers is unsupported.
 
+With the overlapped recall pipeline (``core/recall_pipeline``), the host
+pool is the *source* of both transfer classes: the correction top-up (the
+only host→device DMA the decode step waits on) and the staged speculative
+stream that fills the alternate double buffer. Because ``pinned_host``
+donation keeps the pool pages page-locked, the staged gather lowers to a
+true async DMA on TPU; nothing downstream of attention consumes its result,
+so XLA schedules it behind decode compute. ``pool_on_host`` tells the
+executor/telemetry whether transfers are real DMAs or simulated
+(cost-model) ones.
+
 Usage:
     state = place_decode_state(state, fkv)            # after init/prefill
     shardings = decode_state_shardings(..., fkv=fkv)  # dryrun: memory kinds
@@ -54,6 +64,31 @@ def place_decode_state(state, fkv: FreeKVConfig, mesh=None, specs=None):
         return leaf
 
     return jax.tree_util.tree_map_with_path(move, state)
+
+
+def host_offload_active(fkv: FreeKVConfig) -> bool:
+    """Config-level check: would pools be placed in pinned_host memory?
+    (Use ``pool_on_host`` for ground truth on an actual state pytree.)"""
+    return fkv.offload == "host" and _host_kind_available()
+
+
+def pool_on_host(state) -> bool:
+    """True when the state's pool leaves live in ``pinned_host`` memory —
+    i.e. recall transfers are genuine host→device DMAs rather than the
+    ``offload='sim'`` cost-model simulation."""
+    found = False
+
+    def check(path, leaf):
+        nonlocal found
+        key = str(getattr(path[-1], "key", path[-1]))
+        if key in HOST_KEYS:
+            kind = getattr(getattr(leaf, "sharding", None), "memory_kind",
+                           None)
+            found = found or kind == "pinned_host"
+        return leaf
+
+    jax.tree_util.tree_map_with_path(check, state)
+    return found
 
 
 def pool_bytes(state) -> int:

@@ -1,7 +1,13 @@
-"""Recall: gather selected KV pages from the HND host pool into NHD device
-buffers. This is the pure-jnp reference path; the Pallas double-buffered
-streamed-recall kernel (kernels/recall_gather.py) implements the same contract
-with explicit HBM->VMEM DMA pipelining.
+"""Recall primitives: gather selected KV pages from the HND host pool into
+NHD device buffers. This is the pure-jnp reference path for the
+``(pool, idx) -> (k, v)`` contract; the chunked double-buffered Pallas kernel
+(``kernels/recall_gather.py``) implements the same contract with an explicit
+2-deep VMEM ring and per-chunk DMA overlap.
+
+Scheduling — *which* pages transfer on vs off the decode critical path
+(speculative staging, correction top-up, resident-buffer reuse) — lives one
+level up in ``core/recall_pipeline.RecallExecutor``; every retriever routes
+its transfers through that executor.
 """
 from __future__ import annotations
 

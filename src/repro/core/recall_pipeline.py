@@ -1,0 +1,207 @@
+"""Overlapped double-buffered streamed recall (§4 system side).
+
+The synchronous decode path recalls *every* freshly selected page on the
+critical path and then lets the correction mask (§3.3) pick fresh vs stale
+content per KV head — the speculative-retrieval algorithm with none of its
+systems payoff. This module supplies the payoff: a **recall executor** that
+splits each decode step's transfer into
+
+  * a **correction top-up** — the only on-critical-path transfer: pages for
+    *corrected* heads that are not already resident in the previous step's
+    buffer. Pool pages are written exactly once (at page completion /
+    prefill), so reusing a resident page is bit-exact, and
+  * a **staged recall** — the speculatively selected pages for step t+1
+    stream into the alternate buffer while step t's attention computes over
+    the merged (previous ∪ top-up) buffer. Nothing downstream of attention
+    depends on the staged arrays, so XLA / the TPU DMA engine (or plain JAX
+    async dispatch on the CPU sim) overlaps them with compute; on TPU with
+    ``fkv.offload == "host"`` the source is the ``pinned_host`` pool and the
+    stream is a genuine host→device DMA (see ``core/offload.py``).
+
+The two buffers of the paper's double buffering are the decode state's
+``sel_k/sel_v`` (the buffer attention reads) and the staged arrays that
+become the *next* state's ``sel_k/sel_v`` — per continuous-batching slot,
+carried across engine steps by the slot pool. Chunk-level double buffering
+*within* one transfer lives in the Pallas kernel
+(``kernels/recall_gather.py``: 2-deep VMEM ring, per-chunk DMA overlap).
+
+Guarantee: for any correction mask, ``merged == where(corr, fresh, stale)``
+and ``staged == fresh`` hold bit-exactly, so greedy decode outputs are
+bit-identical with the pipeline on or off (``tests/test_recall_pipeline.py``).
+
+Physicality: through the Pallas kernel (``use_kernels=True``) masked lanes
+issue no DMA, so the top-up/staged/reused split is a real traffic split.
+The jnp reference gather is full-width regardless of masking (a gather has
+no notion of skipping); under ``offload='sim'`` its transfer cost is
+accounted analytically from the block counts (benchmarks/_common.py), which
+is why the counts here — not array shapes — are the source of truth.
+
+Host-side, ``RecallFlightTracker`` accounts per-slot in-flight staged pages
+across continuous-batching steps: a slot freed at a step boundary abandons
+its staged buffer (the next occupant prefills its own), which the serving
+metrics report as dropped in-flight transfer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.core import recall
+
+
+def match_resident(new_idx, prev_idx):
+    """Which newly selected pages already sit in the previous buffer.
+
+    new_idx/prev_idx (B, kv, n_sel) int32 page ids, -1 = invalid.
+    Returns (hit (B, kv, n_sel) bool, src (B, kv, n_sel) int32): for every
+    hit, ``src`` is the position inside the previous buffer holding that
+    page (top-k ids are distinct, so the match is unique)."""
+    eq = (new_idx[..., :, None] == prev_idx[..., None, :]) \
+        & (new_idx >= 0)[..., :, None] & (prev_idx >= 0)[..., None, :]
+    hit = eq.any(axis=-1)
+    src = jnp.argmax(eq, axis=-1).astype(jnp.int32)
+    return hit, src
+
+
+def _take_pages(buf, src):
+    """Gather buffer pages (B, kv, n_sel, p, d) at per-slot positions src."""
+    return jnp.take_along_axis(buf, src[..., None, None], axis=2)
+
+
+@dataclass
+class PipelinedRecall:
+    """One decode step's transfer plan + results (all device arrays)."""
+    use_k: jnp.ndarray        # merged buffer attention reads (B,kv,n_sel,p,d)
+    use_v: jnp.ndarray
+    use_idx: jnp.ndarray      # page ids backing use_k/use_v (B,kv,n_sel)
+    staged_k: jnp.ndarray     # next step's buffer == fresh recall, bit-exact
+    staged_v: jnp.ndarray
+    topup_blocks: jnp.ndarray  # (B,) critical-path (kv-head, page) fetches
+    staged_blocks: jnp.ndarray  # (B,) overlapped fetches
+    reused_blocks: jnp.ndarray  # (B,) buffer hits (no transfer at all)
+
+
+class RecallExecutor:
+    """Double-buffered recall over one (pool, idx) -> (k, v) gather backend.
+
+    ``recall_fn(pool, idx)`` is the full K+V gather (jnp reference, chunked
+    Pallas kernel, or shard-local recall); ``values_fn`` optionally the
+    V-only variant (ShadowKV). The executor is pure (safe under jit): the
+    overlap is expressed through dataflow — attention depends only on
+    ``use_k/use_v``, never on the staged arrays."""
+
+    def __init__(self, recall_fn=None, values_fn=None):
+        self.recall_fn = recall_fn or recall.recall_pages
+        self.values_fn = values_fn or recall.recall_values_only
+
+    # -- blocking path (sync mode / non-speculative baselines) ----------
+    def recall(self, pool, idx):
+        """Full blocking recall — the synchronous baseline's only mode."""
+        return self.recall_fn(pool, idx)
+
+    # -- pipelined path -------------------------------------------------
+    def step(self, pool, new_idx, prev_idx, prev_k, prev_v,
+             need) -> PipelinedRecall:
+        """Plan + execute one overlapped decode step.
+
+        need (B, kv) bool — heads whose fresh pages must be visible to THIS
+        step's attention (the correction mask; all-True for always-fresh
+        baselines). Pages for ``~need`` heads only feed the staged buffer.
+        """
+        dt = prev_k.dtype
+        hit, src = match_resident(new_idx, prev_idx)
+        reused_k = _take_pages(prev_k, src)
+        reused_v = _take_pages(prev_v, src)
+        valid = new_idx >= 0
+        need3 = need[:, :, None]
+
+        # critical path: corrected heads' non-resident pages only
+        topup_idx = jnp.where(need3 & ~hit & valid, new_idx, -1)
+        tk, tv = self.recall_fn(pool, topup_idx)
+        tk, tv = tk.astype(dt), tv.astype(dt)
+        # overlapped: everything else that is fresh and non-resident
+        stage_idx = jnp.where(~need3 & ~hit & valid, new_idx, -1)
+        sk, sv = self.recall_fn(pool, stage_idx)
+        sk, sv = sk.astype(dt), sv.astype(dt)
+
+        hit5 = hit[..., None, None]
+        fresh_k = jnp.where(hit5, reused_k, jnp.where(need3[..., None, None],
+                                                      tk, sk))
+        fresh_v = jnp.where(hit5, reused_v, jnp.where(need3[..., None, None],
+                                                      tv, sv))
+        use_k = jnp.where(need3[..., None, None], fresh_k, prev_k)
+        use_v = jnp.where(need3[..., None, None], fresh_v, prev_v)
+        use_idx = jnp.where(need3, new_idx, prev_idx)
+        return PipelinedRecall(
+            use_k=use_k, use_v=use_v, use_idx=use_idx,
+            staged_k=fresh_k, staged_v=fresh_v,
+            topup_blocks=jnp.sum(topup_idx >= 0, axis=(1, 2)),
+            staged_blocks=jnp.sum(stage_idx >= 0, axis=(1, 2)),
+            reused_blocks=jnp.sum(hit, axis=(1, 2)))
+
+    def step_values(self, pool, new_idx, prev_idx, prev_v) -> PipelinedRecall:
+        """ShadowKV variant: V-only delta fetch against the previous buffer.
+
+        Selection is fresh every step (no correction mask), so everything
+        non-resident is a critical-path fetch — but buffer hits still skip
+        the transfer entirely, and the composed buffer doubles as the next
+        step's resident set."""
+        dt = prev_v.dtype
+        hit, src = match_resident(new_idx, prev_idx)
+        reused_v = _take_pages(prev_v, src)
+        fetch_idx = jnp.where(~hit & (new_idx >= 0), new_idx, -1)
+        fv = self.values_fn(pool, fetch_idx).astype(dt)
+        fresh_v = jnp.where(hit[..., None, None], reused_v, fv)
+        zero = jnp.zeros_like(fresh_v)
+        return PipelinedRecall(
+            use_k=zero, use_v=fresh_v, use_idx=new_idx,
+            staged_k=zero, staged_v=fresh_v,
+            topup_blocks=jnp.sum(fetch_idx >= 0, axis=(1, 2)),
+            staged_blocks=jnp.zeros(new_idx.shape[0], jnp.int32),
+            reused_blocks=jnp.sum(hit, axis=(1, 2)))
+
+
+class RecallFlightTracker:
+    """Host-side per-slot accounting of in-flight staged recall.
+
+    The staged buffer a slot carries out of step t is consumed by step t+1
+    — unless the slot turns over at the boundary (request finished, slot
+    freed/refilled), in which case the in-flight pages were streamed for
+    nothing. The continuous-batching scheduler feeds this tracker each step
+    and invalidates on slot free; the dropped total surfaces in
+    ``EngineMetrics.summary()["recall_overlap"]``."""
+
+    def __init__(self):
+        self._in_flight: Dict[int, float] = {}
+        self.dropped_pages = 0.0
+        self.staged_pages = 0.0
+        self.topup_pages = 0.0
+        self.reused_pages = 0.0
+
+    def note_step(self, slot: int, staged: float, topup: float = 0.0,
+                  reused: float = 0.0):
+        """Record one engine step's per-slot transfer split; the staged
+        pages replace whatever the slot had in flight (now consumed)."""
+        self._in_flight[slot] = staged
+        self.staged_pages += staged
+        self.topup_pages += topup
+        self.reused_pages += reused
+
+    def invalidate(self, slot: int):
+        """Slot turnover: the staged buffer is abandoned mid-flight."""
+        self.dropped_pages += self._in_flight.pop(slot, 0.0)
+
+    def in_flight(self, slot: int) -> Optional[float]:
+        return self._in_flight.get(slot)
+
+    def summary(self) -> dict:
+        moved = self.staged_pages + self.topup_pages
+        return {
+            "staged_pages": self.staged_pages,
+            "topup_pages": self.topup_pages,
+            "reused_pages": self.reused_pages,
+            "dropped_pages": self.dropped_pages,
+            "hidden_fraction": self.staged_pages / moved if moved else 0.0,
+        }

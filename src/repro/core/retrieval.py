@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, FreeKVConfig
 from repro.core import paging, recall, selection
 from repro.core.correction import corrected_heads
+from repro.core.recall_pipeline import RecallExecutor
 from repro.models.layers import softcap
 
 NEG_INF = -1e30
@@ -124,13 +125,29 @@ class FreeKVRetriever:
         self.offloaded = True
         self.mesh = mesh                        # enables shard-local recall
         self.use_kernels = fkv.use_kernels and mesh is None
+        self.executor = RecallExecutor(recall_fn=self._recall,
+                                       values_fn=self._recall_values)
+
+    def _overlap(self):
+        """Pipelined (double-buffered) recall applies to the speculative
+        single-device path; the sharded path keeps its own fused step."""
+        return (self.fkv.recall_overlap and self.speculative
+                and self.mesh is None)
+
+    def _recall_values(self, pool, idx):
+        if self.use_kernels:
+            from repro.kernels import ops
+            return ops.recall_values(pool, idx,
+                                     chunk=self.fkv.recall_chunk_pages or None)
+        return recall.recall_values_only(pool, idx)
 
     def _recall(self, pool, idx):
         mesh = self.mesh
         if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
             if self.use_kernels:
                 from repro.kernels import ops
-                return ops.recall_gather(pool, idx)
+                return ops.recall_gather(
+                    pool, idx, chunk=self.fkv.recall_chunk_pages or None)
             return recall.recall_pages(pool, idx)
         import math as _math
         ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -209,24 +226,42 @@ class FreeKVRetriever:
             q_sel = q_proxy
         new_idx, _ = selection.select_pages(
             cfg, fkv, q_sel, state["summ"], state["length"], self._n_sel(state))
-        new_k, new_v = self._recall(state["pool"], new_idx)
-        new_k = new_k.astype(state["sel_k"].dtype)
-        new_v = new_v.astype(state["sel_v"].dtype)
+        n_sel = new_idx.shape[2]
+        B = q.shape[0]
+        reused = jnp.zeros((B,), jnp.int32)
 
-        # --- fine-grained correction (§3.3) --------------------------------
         if self.speculative:
             corr, sim = corrected_heads(cfg, fkv, q, state["qprev"])
             first_step = state["qprev"].astype(jnp.float32)
             is_cold = jnp.all(first_step == 0)       # no prefill qprev -> correct
             corr = corr | is_cold
-            m = corr[:, :, None, None, None]
-            use_k = jnp.where(m, new_k, state["sel_k"])
-            use_v = jnp.where(m, new_v, state["sel_v"])
-            use_idx = jnp.where(corr[:, :, None], new_idx, state["sel_idx"])
         else:                                        # ArkVale/InfiniGen: always fresh
-            corr = jnp.ones((q.shape[0], cfg.n_kv_heads), bool)
-            sim = jnp.zeros((q.shape[0], cfg.n_kv_heads), jnp.float32)
-            use_k, use_v, use_idx = new_k, new_v, new_idx
+            corr = jnp.ones((B, cfg.n_kv_heads), bool)
+            sim = jnp.zeros((B, cfg.n_kv_heads), jnp.float32)
+
+        if self._overlap():
+            # --- pipelined (§4): correction top-up on the critical path,
+            # staged double-buffer refill off it (core/recall_pipeline) ----
+            pr = self.executor.step(state["pool"], new_idx, state["sel_idx"],
+                                    state["sel_k"], state["sel_v"], corr)
+            use_k, use_v, use_idx = pr.use_k, pr.use_v, pr.use_idx
+            new_k, new_v = pr.staged_k, pr.staged_v
+            sync_pages, async_pages = pr.topup_blocks, pr.staged_blocks
+            reused = pr.reused_blocks
+        else:
+            # --- synchronous reference: full blocking recall every step ----
+            new_k, new_v = self.executor.recall(state["pool"], new_idx)
+            new_k = new_k.astype(state["sel_k"].dtype)
+            new_v = new_v.astype(state["sel_v"].dtype)
+            if self.speculative:                     # correction merge (§3.3)
+                m = corr[:, :, None, None, None]
+                use_k = jnp.where(m, new_k, state["sel_k"])
+                use_v = jnp.where(m, new_v, state["sel_v"])
+                use_idx = jnp.where(corr[:, :, None], new_idx, state["sel_idx"])
+            else:
+                use_k, use_v, use_idx = new_k, new_v, new_idx
+            sync_pages = jnp.sum(corr, axis=1) * n_sel
+            async_pages = jnp.sum(~corr, axis=1) * n_sel
 
         k_cat, v_cat, pos = _cat_regions(fkv, state, use_k, use_v, use_idx, p)
         o = _attend(cfg, q, k_cat, v_cat, pos, cur_pos, fkv=fkv,
@@ -234,13 +269,14 @@ class FreeKVRetriever:
 
         state = dict(state, sel_k=new_k, sel_v=new_v, sel_idx=new_idx,
                      qprev=q.astype(state["qprev"].dtype))
-        n_sel = new_idx.shape[2]
         info = {
             "corrected": corr, "similarity": sim,
-            # bytes on the critical path (synchronous recall for corrected heads)
-            "sync_pages": jnp.sum(corr, axis=1) * n_sel,
-            # bytes recalled off the critical path (speculative, overlapped)
-            "async_pages": jnp.sum(~corr, axis=1) * n_sel,
+            # (kv-head, page) blocks on the critical path (blocking recall)
+            "sync_pages": sync_pages,
+            # blocks recalled off the critical path (speculative, overlapped)
+            "async_pages": async_pages,
+            # blocks served from the resident double buffer (no transfer)
+            "reused_pages": reused,
             "granularity": "token" if self.token_wise_recall else "page",
         }
         return o, state, info
@@ -569,13 +605,26 @@ class ShadowKVRetriever(FreeKVRetriever):
                            state["k_w"].astype(jnp.float32))
         k_rec = jnp.where((idx >= 0)[..., None, None], k_rec, 0).astype(q.dtype)
         # values: genuine recall (V half only — ShadowKV's saving)
-        v_sel = recall.recall_values_only(state["pool"], idx).astype(q.dtype)
+        if fkv.recall_overlap and self.mesh is None:
+            # executor delta-fetch: V pages already resident in the previous
+            # step's buffer are reused bit-exactly; only misses transfer
+            pr = self.executor.step_values(state["pool"], idx,
+                                           state["sel_idx"], state["sel_v"])
+            v_sel = pr.staged_v.astype(q.dtype)
+            sync_pages = pr.topup_blocks // 2                       # V-only
+            reused = pr.reused_blocks // 2
+            state = dict(state, sel_v=pr.staged_v)
+        else:
+            v_sel = self._recall_values(state["pool"], idx).astype(q.dtype)
+            sync_pages = jnp.sum(idx >= 0, axis=(1, 2)) // 2        # V-only
+            reused = jnp.zeros((B,), jnp.int32)
         k_cat, v_cat, pos = _cat_regions(fkv, state, k_rec, v_sel, idx, p)
         o = _attend(cfg, q, k_cat, v_cat, pos, cur_pos)
         state = dict(state, sel_idx=idx, qprev=q.astype(state["qprev"].dtype))
         info = {"corrected": jnp.ones((B, kv), bool),
-                "sync_pages": jnp.sum(idx >= 0, axis=(1, 2)) // 2,  # V-only
+                "sync_pages": sync_pages,
                 "async_pages": jnp.zeros((B,), jnp.int32),
+                "reused_pages": reused,
                 "similarity": jnp.zeros((B, kv)), "granularity": "page"}
         return o, state, info
 

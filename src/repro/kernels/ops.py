@@ -45,9 +45,17 @@ def page_scores(q, summ, *, scale, block_pages=128, interpret=None):
                    interpret=interpret)
 
 
-def recall_gather(pool, idx, *, interpret=None):
+def recall_gather(pool, idx, *, chunk=None, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
-    return _recall(pool, idx, interpret=interpret)
+    return _recall(pool, idx, chunk=chunk, interpret=interpret)
+
+
+def recall_values(pool, idx, *, chunk=None, interpret=None):
+    """ShadowKV-style V-only recall: half the transfer, K output unused."""
+    interpret = _default_interpret() if interpret is None else interpret
+    _, v = _recall(pool, idx, values_only=True, chunk=chunk,
+                   interpret=interpret)
+    return v
 
 
 def flash_prefill(q, k, v, *, scale, causal=True, window=None, softcap=None,

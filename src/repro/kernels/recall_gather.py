@@ -1,16 +1,36 @@
-"""Pallas kernel: double-buffered streamed recall (§4.2, TPU adaptation).
+"""Pallas kernel: chunked double-buffered streamed recall (§4.2, TPU).
 
-Gathers the selected KV pages out of the HND pool into NHD device buffers.
-The page index feeding each grid step's BlockSpec comes from a SCALAR-PREFETCH
-operand (the selected page ids), so the pipeline's DMA engine fetches page
-n+1's (2, p, d) HND block from (host-mapped) HBM while page n's layout
-conversion/store executes — Pallas' automatic grid pipelining IS the paper's
-two staging buffers (double buffering), expressed TPU-natively.
+Gathers the selected KV pages out of the HND pool into NHD device buffers
+with an explicit two-deep VMEM ring: while chunk *c*'s pages drain from the
+ring slot into the outputs (layout conversion + store), chunk *c+1*'s DMAs
+stream into the alternate slot. This is the paper's double buffering
+expressed with manual ``pltpu.make_async_copy`` descriptors — one DMA per
+selected page, because selected pages are scattered in the pool; each DMA
+moves the maximal contiguous unit, the ``(2, p, d)`` HND K+V block
+(16 KiB at p=32, d=128, bf16). The page ids arrive as a SCALAR-PREFETCH
+operand so the copy source addresses are computable before the body runs.
 
-The 16 KiB contiguous (2*p*d, bf16) transfer unit is the paper's maximal-unit
-argument verbatim: the HND pool keeps each (kv-head, page) block contiguous.
+The pool stays in ``pltpu.ANY`` memory space ((host-mapped) HBM — see
+``core/offload.py``); the *staging* footprint is the ring alone (2 chunks of
+pages), independent of the selection budget. The per-(b, h) output blocks
+are ``(n_sel, p, d)`` and do scale with the budget — at production shapes
+(n_sel=32, p=32, d=128, bf16) that is 256 KiB per output, well under VMEM.
+
+Invalid (``-1``-padded) lanes issue no DMA at all — the masked split the
+recall executor plans (top-up vs staged vs reused) is a physical traffic
+split, not just accounting. ``values_only=True`` transfers just the V half
+of each block (ShadowKV-style recall, half the bytes); the K output is then
+all zeros.
+
+Contract (shared with ``core/recall.recall_pages`` and
+``kernels/ref.recall_gather_ref``): ``(pool, idx) -> (k, v)``, invalid pages
+(``idx < 0``) produce zeros. Interpret-mode parity on CPU is covered by
+``tests/test_recall_pipeline.py``; orchestration of *which* pages transfer
+on vs off the decode critical path lives in ``core/recall_pipeline.py``.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -18,37 +38,94 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(idx_ref, pool_ref, k_ref, v_ref):
-    b, h, n = pl.program_id(0), pl.program_id(1), pl.program_id(2)
-    valid = idx_ref[b, h, n] >= 0
-    blk = pool_ref[0, 0, 0]                       # (2, p, d) HND block
-    zero = jnp.zeros_like(blk[0])
-    k_ref[0, 0, 0] = jnp.where(valid, blk[0], zero)   # NHD (p, d) halves
-    v_ref[0, 0, 0] = jnp.where(valid, blk[1], zero)
+def _kernel(idx_ref, pool_ref, k_ref, v_ref, scratch, sems, *,
+            n_sel, n_pages, chunk, n_chunks, values_only):
+    b, h = pl.program_id(0), pl.program_id(1)
+
+    def lane_valid(i):
+        # invalid (-1 padded) and tail lanes issue NO DMA at all — the
+        # transfer truly skips them, matching the telemetry's block counts
+        return (i < n_sel) & (idx_ref[b, h, jnp.minimum(i, n_sel - 1)] >= 0)
+
+    def page_of(i):
+        return jnp.clip(idx_ref[b, h, jnp.minimum(i, n_sel - 1)],
+                        0, n_pages - 1)
+
+    def dma(slot, j, i):
+        src = pool_ref.at[b, page_of(i), h]
+        if values_only:
+            src = src.at[1]                    # V half of the (2, p, d) block
+        return pltpu.make_async_copy(src, scratch.at[slot, j],
+                                     sems.at[slot, j])
+
+    def start_chunk(slot, c):
+        for j in range(chunk):                 # one DMA per scattered page
+            i = c * chunk + j
+
+            @pl.when(lane_valid(i))
+            def _():
+                dma(slot, j, i).start()
+
+    start_chunk(0, 0)                          # warm-up: fill ring slot 0
+
+    def body(c, _):
+        slot = jax.lax.rem(c, 2)
+        nxt = jax.lax.rem(c + 1, 2)
+
+        @pl.when(c + 1 < n_chunks)             # stream chunk c+1 into the
+        def _():                               # alternate ring slot
+            start_chunk(nxt, c + 1)
+
+        for j in range(chunk):                 # drain chunk c
+            i = c * chunk + j
+            valid = lane_valid(i)
+
+            @pl.when(valid)                    # same predicate as the start
+            def _():
+                dma(slot, j, i).wait()
+
+            @pl.when(i < n_sel)
+            def _():
+                blk = scratch[slot, j]
+                if values_only:
+                    zero = jnp.zeros_like(blk)
+                    k_ref[0, 0, i] = zero
+                    v_ref[0, 0, i] = jnp.where(valid, blk, zero)
+                else:
+                    zero = jnp.zeros_like(blk[0])
+                    k_ref[0, 0, i] = jnp.where(valid, blk[0], zero)
+                    v_ref[0, 0, i] = jnp.where(valid, blk[1], zero)
+        return 0
+
+    jax.lax.fori_loop(0, n_chunks, body, 0)
 
 
-def recall_gather(pool, idx, *, interpret=True):
+def recall_gather(pool, idx, *, values_only=False, chunk=None, interpret=True):
     """pool (B, n_pages, kv, 2, p, d) HND; idx (B, kv, n_sel) int32 (-1 pad)
     -> (k, v) each (B, kv, n_sel, p, d)."""
     B, n_pages, kv, _, p, d = pool.shape
     n_sel = idx.shape[2]
+    chunk = max(1, min(chunk or 8, n_sel))
+    n_chunks = -(-n_sel // chunk)
 
-    def pool_map(b, h, n, idx_ref):
-        page = jnp.clip(idx_ref[b, h, n], 0, n_pages - 1)
-        return (b, page, h, 0, 0, 0)
-
+    ring = ((2, chunk, p, d) if values_only else (2, chunk, 2, p, d))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(B, kv, n_sel),
-        in_specs=[pl.BlockSpec((1, 1, 1, 2, p, d), pool_map)],
+        grid=(B, kv),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
         out_specs=[
-            pl.BlockSpec((1, 1, 1, p, d), lambda b, h, n, idx_ref: (b, h, n, 0, 0)),
-            pl.BlockSpec((1, 1, 1, p, d), lambda b, h, n, idx_ref: (b, h, n, 0, 0)),
+            pl.BlockSpec((1, 1, n_sel, p, d), lambda b, h, idx_ref: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, n_sel, p, d), lambda b, h, idx_ref: (b, h, 0, 0, 0)),
         ],
+        scratch_shapes=[pltpu.VMEM(ring, pool.dtype),
+                        pltpu.SemaphoreType.DMA((2, chunk))],
     )
     out_shape = [jax.ShapeDtypeStruct((B, kv, n_sel, p, d), pool.dtype),
                  jax.ShapeDtypeStruct((B, kv, n_sel, p, d), pool.dtype)]
+    kernel = functools.partial(
+        _kernel, n_sel=n_sel, n_pages=n_pages, chunk=chunk,
+        n_chunks=n_chunks, values_only=values_only)
     k, v = pl.pallas_call(
-        _kernel, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret,
+        kernel, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret,
     )(idx, pool)
     return k, v

@@ -1,8 +1,16 @@
-"""Serving launcher CLI: batched requests against any arch + retrieval method.
+"""Serving launcher CLI: drive the continuous-batching engine (admission
+queue, per-slot lifecycle, optional radix-trie prefix cache) — or the static
+chunked fallback — against any arch + retrieval method, with the overlapped
+double-buffered recall pipeline on by default (``--no-overlap`` for the
+synchronous reference; outputs are bit-identical either way).
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b-smoke \
         --method freekv --context 512 --new-tokens 16 --batch 2 \
         --scheduler continuous --prefix-cache-tokens 4096
+
+Prints per-request completions plus ``EngineMetrics.summary()`` (tokens/s,
+slot occupancy, TTFT, hidden vs exposed recall transfer). See
+``docs/serving.md`` and ``docs/architecture.md``.
 """
 import argparse
 import json
@@ -34,13 +42,17 @@ def main():
                     default="continuous")
     ap.add_argument("--prefill-bucket", type=int, default=64)
     ap.add_argument("--prefix-cache-tokens", type=int, default=0)
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable the overlapped recall pipeline (use the "
+                         "synchronous blocking-recall reference path)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
     fkv = FreeKVConfig(method=args.method, page_size=args.page_size,
                        budget=args.budget, n_sink=args.page_size * 2,
-                       n_window=args.page_size * 2, tau=args.tau)
+                       n_window=args.page_size * 2, tau=args.tau,
+                       recall_overlap=not args.no_overlap)
     eng = ServeEngine(cfg, fkv, params,
                       max_len=args.context + args.new_tokens + args.page_size
                       + args.prefill_bucket,

@@ -627,11 +627,14 @@ def _info_stats(info, B):
     if info is None:
         z = jnp.zeros((B,), jnp.float32)
         return {"corrected": z, "kv_heads": z, "sync_pages": z,
-                "async_pages": z, "sim_sum": z, "sim_cnt": z}
+                "async_pages": z, "reused_pages": z, "sim_sum": z,
+                "sim_cnt": z}
+    reused = info.get("reused_pages", jnp.zeros((B,), jnp.int32))
     return {"corrected": jnp.sum(info["corrected"], 1).astype(jnp.float32),
             "kv_heads": jnp.full((B,), info["corrected"].shape[1], jnp.float32),
             "sync_pages": info["sync_pages"].astype(jnp.float32),
             "async_pages": info["async_pages"].astype(jnp.float32),
+            "reused_pages": reused.astype(jnp.float32),
             "sim_sum": jnp.sum(info["similarity"], 1).astype(jnp.float32),
             "sim_cnt": jnp.full((B,), info["similarity"].shape[1], jnp.float32)}
 

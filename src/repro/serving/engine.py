@@ -10,6 +10,14 @@ Two schedulers share the jitted model entry points:
 * ``scheduler="static"`` — the original chunked lockstep path, kept as a
   fallback and as the baseline for ``benchmarks/serving_throughput.py``.
 
+Recall transfers ride the overlapped double-buffered pipeline
+(``core/recall_pipeline``, on by default via ``FreeKVConfig.recall_overlap``):
+each slot carries a staged speculative buffer across continuous-batching
+steps, only correction top-ups block the decode step, and the engine-owned
+``RecallFlightTracker`` accounts hidden vs exposed transfer per slot —
+including buffers abandoned in flight at slot turnover. See
+``EngineMetrics.summary()["recall_overlap"]`` and ``docs/architecture.md``.
+
 Prompt lengths can be bucketed (``prefill_bucket``) to bound the number of
 compiled prefill shapes under heterogeneous traffic: cold prompts are
 left-padded to the bucket (pads become attended context, exactly as the
@@ -32,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, FreeKVConfig
+from repro.core.recall_pipeline import RecallFlightTracker
 from repro.models.model import (prefill, prefill_extend, serve_step,
                                 supports_kv_extend)
 from repro.serving.kv_slots import SlotPool
@@ -99,6 +108,10 @@ class ServeEngine:
                              else None)
         self._pool: Optional[SlotPool] = None
         self.last_metrics: Optional[EngineMetrics] = None
+        # per-slot in-flight staged recall accounting (core/recall_pipeline);
+        # the continuous scheduler feeds it each step and invalidates on
+        # slot turnover. Reset per generate() run.
+        self.recall_tracker = RecallFlightTracker()
 
     # ------------------------------------------------------------------
     # scheduler backend protocol
@@ -208,6 +221,8 @@ class ServeEngine:
             out.extend(self._generate_batch(requests[i: i + self.batch_size],
                                             seed + i))
         em = EngineMetrics(num_slots=self.batch_size, scheduler="static")
+        from repro.core.offload import host_offload_active
+        em.transfer_is_dma = host_offload_active(self.fkv)
         em.wall_s = time.perf_counter() - t0
         em.requests = [RequestMetrics(uid=c.uid, prompt_tokens=len(r.tokens),
                                       max_new_tokens=r.max_new_tokens,
@@ -223,8 +238,11 @@ class ServeEngine:
             self._pool = self.make_slot_pool(self.batch_size)
         else:
             self._pool.reset_all()
+        self.recall_tracker = RecallFlightTracker()
         sched = ContinuousScheduler(self, self._pool)
         tracked, em = sched.run(requests, seed)
+        from repro.core.offload import pool_on_host
+        em.transfer_is_dma = pool_on_host(self._pool.state)
         if self.prefix_cache is not None:
             em.prefix_cache = self.prefix_cache.stats()
         self.last_metrics = em
@@ -262,7 +280,8 @@ class ServeEngine:
         # (they still ride the lockstep batch — that cost is what the
         # continuous scheduler removes — but they no longer pollute stats)
         aggs = [{k: 0.0 for k in ("corrected", "kv_heads", "sync_pages",
-                                  "async_pages", "sim_sum", "sim_cnt")}
+                                  "async_pages", "reused_pages", "sim_sum",
+                                  "sim_cnt")}
                 for _ in reqs]
         decode_ss = [0.0 for _ in reqs]
         cur = sample(logits, self.sampler, key)

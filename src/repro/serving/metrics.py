@@ -62,10 +62,19 @@ class EngineMetrics:
     steps: int = 0
     active_slot_steps: int = 0        # sum over steps of active slots
     wall_s: float = 0.0
-    # retrieval traffic (counts of (kv-head, page) blocks; see core/retrieval)
+    # retrieval traffic (counts of (kv-head, page) blocks; see core/retrieval
+    # and core/recall_pipeline): sync = blocking/exposed on the decode
+    # critical path, async = staged/hidden behind compute, reused = served
+    # from the resident double buffer (no transfer), dropped = staged
+    # in-flight when the slot turned over (wasted transfer)
     sync_pages: float = 0.0
     async_pages: float = 0.0
+    reused_pages: float = 0.0
+    dropped_pages: float = 0.0
     page_block_bytes: int = 0         # bytes of one (kv-head, page) K+V block
+    # True when the pool lives in pinned_host memory (real host->device DMA);
+    # False under offload='sim' (transfers are cost-model-accounted only)
+    transfer_is_dma: bool = False
     prefix_cache: Dict = field(default_factory=dict)
     scheduler: str = "continuous"
 
@@ -89,7 +98,27 @@ class EngineMetrics:
     @property
     def recall_bytes(self) -> Dict[str, float]:
         return {"sync": self.sync_pages * self.page_block_bytes,
-                "async": self.async_pages * self.page_block_bytes}
+                "async": self.async_pages * self.page_block_bytes,
+                "dropped": self.dropped_pages * self.page_block_bytes}
+
+    @property
+    def exposed_transfer_bytes(self) -> float:
+        """Bytes whose transfer latency the decode critical path saw."""
+        return self.sync_pages * self.page_block_bytes
+
+    @property
+    def hidden_transfer_bytes(self) -> float:
+        """Bytes streamed behind decode compute (staged double buffer)."""
+        return self.async_pages * self.page_block_bytes
+
+    @property
+    def hidden_fraction(self) -> float:
+        """Fraction of transferred recall bytes hidden behind compute.
+
+        Buffer-reuse hits move no bytes at all, so they appear in neither
+        numerator nor denominator — see ``reused_pages`` for that saving."""
+        moved = self.hidden_transfer_bytes + self.exposed_transfer_bytes
+        return self.hidden_transfer_bytes / moved if moved else 0.0
 
     def summary(self) -> dict:
         done = [r for r in self.requests if r.finish_t is not None]
@@ -110,5 +139,14 @@ class EngineMetrics:
                                  if r.itl_s is not None]),
             "recall_bytes_sync": self.recall_bytes["sync"],
             "recall_bytes_async": self.recall_bytes["async"],
+            "recall_overlap": {
+                "hidden_bytes": self.hidden_transfer_bytes,
+                "exposed_bytes": self.exposed_transfer_bytes,
+                "hidden_fraction": self.hidden_fraction,
+                "reused_pages": self.reused_pages,
+                "dropped_in_flight_bytes":
+                    self.dropped_pages * self.page_block_bytes,
+                "transfer_is_dma": self.transfer_is_dma,
+            },
             "prefix_cache": dict(self.prefix_cache),
         }

@@ -28,13 +28,14 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.core.recall_pipeline import RecallFlightTracker
 from repro.serving.metrics import EngineMetrics, RequestMetrics
 
 # request lifecycle states
 QUEUED, PREFILL, DECODE, DONE = "queued", "prefill", "decode", "done"
 
 _STAT_KEYS = ("corrected", "kv_heads", "sync_pages", "async_pages",
-              "sim_sum", "sim_cnt")
+              "reused_pages", "sim_sum", "sim_cnt")
 
 
 @dataclass
@@ -88,6 +89,10 @@ class ContinuousScheduler:
 
         em = EngineMetrics(num_slots=pool.num_slots, scheduler="continuous",
                            page_block_bytes=backend.page_block_bytes)
+        # per-slot in-flight staged recall: the double buffer a slot carries
+        # out of step t is consumed by step t+1 unless the slot turns over
+        flight = getattr(backend, "recall_tracker", None) \
+            or RecallFlightTracker()
         active: Dict[int, _Tracked] = {}
         cur = np.zeros((pool.num_slots,), np.int32)
         key = jax.random.PRNGKey(seed)
@@ -103,6 +108,7 @@ class ContinuousScheduler:
             tr.metrics.decode_s = tr.decode_s
             done.append(tr)
             if slot is not None:
+                flight.invalidate(slot)   # staged buffer abandoned in flight
                 pool.free(slot)
 
         while queue or active:
@@ -142,7 +148,8 @@ class ContinuousScheduler:
             logits, new_state, stats = backend.step(pool.state, cur[:, None])
             key = jax.random.fold_in(key, step_idx)
             toks = np.asarray(backend.sample(logits, key))
-            stats_np = {k: np.asarray(stats[k]) for k in _STAT_KEYS}
+            stats_np = {k: (np.asarray(stats[k]) if k in stats
+                            else np.zeros(pool.num_slots)) for k in _STAT_KEYS}
             dt = time.perf_counter() - ts
             pool.state = new_state
             em.record_step(len(active))
@@ -150,6 +157,12 @@ class ContinuousScheduler:
                 sum(stats_np["sync_pages"][s] for s in active))
             em.async_pages += float(
                 sum(stats_np["async_pages"][s] for s in active))
+            em.reused_pages += float(
+                sum(stats_np["reused_pages"][s] for s in active))
+            for s in active:
+                flight.note_step(s, float(stats_np["async_pages"][s]),
+                                 float(stats_np["sync_pages"][s]),
+                                 float(stats_np["reused_pages"][s]))
 
             for slot, tr in list(active.items()):
                 tr.decode_s += dt
@@ -164,6 +177,7 @@ class ContinuousScheduler:
             step_idx += 1
 
         em.wall_s = now()
+        em.dropped_pages = flight.dropped_pages
         done.sort(key=lambda tr: tr.order)
         em.requests = [tr.metrics for tr in done]
         return done, em

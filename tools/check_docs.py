@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Check that intra-repo markdown links resolve (CI docs job; stdlib only).
+
+Scans every tracked *.md file for inline links/images and verifies that
+relative targets exist on disk (anchors are stripped; absolute URLs and
+mailto are skipped). Also verifies code-path references of the form
+`src/...`/`benchmarks/...`/`tests/...` printed in docs tables exist, so the
+module map cannot silently rot.
+
+    python tools/check_docs.py          # exits non-zero on broken links
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+# backticked repo paths in docs prose/tables, e.g. `src/repro/core/recall.py`
+PATH_RE = re.compile(
+    r"`((?:src|benchmarks|tests|docs|tools|examples)/[A-Za-z0-9_./-]+?)`")
+SKIP_DIRS = {".git", ".github", "__pycache__", ".claude", "artifacts"}
+
+
+def md_files():
+    for p in sorted(ROOT.rglob("*.md")):
+        if not any(part in SKIP_DIRS for part in p.parts):
+            yield p
+
+
+def check_file(md: Path):
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (md.parent / rel).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    for m in PATH_RE.finditer(text):
+        path = m.group(1).rstrip("/")
+        if not (ROOT / path).exists():
+            errors.append(f"{md.relative_to(ROOT)}: missing path -> {path}")
+    return errors
+
+
+def main() -> int:
+    all_errors = []
+    n = 0
+    for md in md_files():
+        n += 1
+        all_errors += check_file(md)
+    for e in all_errors:
+        print(f"ERROR: {e}")
+    print(f"checked {n} markdown files: "
+          f"{'OK' if not all_errors else f'{len(all_errors)} broken'}")
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
