@@ -127,14 +127,17 @@ def decode_step_cost(cfg: ArchConfig, fkv: FreeKVConfig, method: str, B: int,
     sel_flops = B * H * n_pages * 2 * d * 2 * n_layers_attn
     select = sel_flops / hw.peak_flops + n_layers_attn * 2e-6
 
-    # --- recall volume
+    # --- recall volume (quant-aware: the quantized host tier shrinks the
+    # transferred page payload to bits/8 per element + fp32 scale bytes)
     n_sel = max(0, (fkv.budget - fkv.n_sink - fkv.n_window) // p)
-    page_bytes = 2 * p * d * itemsize                  # K+V contiguous (HND)
+    from repro.quant import page_block_bytes
+    page_bytes = page_block_bytes(fkv, d, itemsize)    # K+V contiguous (HND)
     if method in ("full", "quest", "raas", "streaming"):
         recall_bytes, unit = 0, page_bytes
     elif method == "shadowkv":
-        recall_bytes = B * kv * n_sel * (p * d * itemsize) * n_layers_attn
-        unit = p * d * itemsize                        # V-only pages
+        v_bytes = page_bytes // 2      # V half: payload and scales both halve
+        recall_bytes = B * kv * n_sel * v_bytes * n_layers_attn
+        unit = v_bytes                                 # V-only pages
     elif method == "infinigen":
         recall_bytes = B * kv * n_sel * page_bytes * n_layers_attn
         unit = d * itemsize                            # token-wise transfers
@@ -170,3 +173,57 @@ def decode_step_cost(cfg: ArchConfig, fkv: FreeKVConfig, method: str, B: int,
 
 def csv_row(name, us, derived=""):
     print(f"{name},{us:.3f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# machine-readable perf trajectory files (BENCH_<name>.json at the repo root)
+# ---------------------------------------------------------------------------
+def _jsonable(obj):
+    """Best-effort conversion of benchmark return values to JSON types."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return _jsonable(dataclasses.asdict(obj))
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, (str, int, bool)) or obj is None:
+        return obj
+    if isinstance(obj, float):
+        return obj if obj == obj and abs(obj) != float("inf") else str(obj)
+    return str(obj)
+
+
+def git_sha() -> str:
+    import subprocess
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            timeout=10, check=True).stdout.strip()
+    except Exception:  # noqa: BLE001  (no git / not a checkout)
+        return "unknown"
+
+
+def bench_json(name: str, config: dict, metrics) -> str:
+    """Write ``BENCH_<name>.json`` at the repo root and return its path.
+
+    Schema: {"benchmark", "config", "metrics", "git_sha"} — one file per
+    benchmark section, overwritten per run, so perf history is trackable
+    across PRs by diffing the committed trajectory files (docs/benchmarks.md
+    keeps the human-readable trajectory table)."""
+    import json
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, f"BENCH_{name}.json")
+    payload = {"benchmark": name, "config": _jsonable(config),
+               "metrics": _jsonable(metrics), "git_sha": git_sha()}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {os.path.relpath(path, root)}")
+    return path

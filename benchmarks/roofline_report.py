@@ -56,10 +56,12 @@ def render_markdown(mesh="single"):
 
 
 def main():
+    all_rows = {}
     for mesh in ("single", "multi"):
         rows = load(mesh)
         if not rows:
             continue
+        all_rows[mesh] = rows
         ok = [r for r in rows if "error" not in r]
         print(f"roofline/{mesh},{len(ok)},of={len(rows)}")
         for r in ok:
@@ -67,6 +69,7 @@ def main():
                   f"{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e6:.1f},"
                   f"dominant={r['dominant']};useful={r['useful']:.3f};"
                   f"mem={r['mem_gb']:.2f}GB")
+    return all_rows
 
 
 if __name__ == "__main__":

@@ -1,5 +1,8 @@
 """Benchmark driver: one section per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and writes a machine-readable
+``BENCH_<section>.json`` trajectory file at the repo root per section
+(schema: {benchmark, config, metrics, git_sha} — see ``_common.bench_json``)
+so perf history is trackable across PRs.
 
   accuracy            Tables 2/3 proxy (attention fidelity + page overlap)
   breakdown           Fig. 1 right (latency decomposition cost model)
@@ -9,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   similarity          Fig. 3 / Table 8 (adjacent-step query cosine)
   correction          Table 9 (correction rate vs tau/drift)
   selection_ablation  App. B.2 (MaxQ..MeanS) + B.3 (tau sweep)
+  quant               quantized host KV tier: needle accuracy + recall bytes
   roofline            Roofline table from dry-run artifacts
 
 Run separately (needs its own process: forces 8 XLA host devices):
@@ -22,44 +26,73 @@ sys.path.insert(0, os.path.dirname(__file__))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SECTIONS = ("accuracy", "breakdown", "e2e", "ablation", "measured",
-            "similarity", "correction", "selection_ablation", "roofline")
+            "similarity", "correction", "selection_ablation", "quant",
+            "roofline")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help=f"subset of {SECTIONS}")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing BENCH_<name>.json trajectory files")
     args, _ = ap.parse_known_args()
     todo = set(args.only) if args.only else set(SECTIONS)
+    from _common import bench_json
+
+    def emit(name, config, metrics):
+        if not args.no_json and metrics:   # no file for empty sections
+            bench_json(name, config, metrics)
+
     print("name,us_per_call,derived")
 
+    # One config dict per section, passed verbatim to BOTH the benchmark
+    # call and the trajectory file, so BENCH_<name>.json metadata can never
+    # desynchronize from what actually ran.
     if "accuracy" in todo:
         import retrieval_accuracy
-        retrieval_accuracy.run()
+        cfg = dict(arch="granite-3-8b-smoke", B=4, T=512, steps=48)
+        emit("accuracy", cfg, retrieval_accuracy.run(**cfg))
     if todo & {"breakdown", "e2e", "ablation", "measured"}:
         import latency
         if "breakdown" in todo:
-            latency.breakdown("llama31-8b")
-            latency.breakdown("qwen25-7b")
+            cfg = dict(B=1, context=32768)
+            emit("breakdown", cfg,
+                 {arch: latency.breakdown(arch, **cfg)
+                  for arch in ("llama31-8b", "qwen25-7b")})
         if "e2e" in todo:
-            latency.e2e("llama31-8b")
+            cfg = dict(arch="llama31-8b")
+            emit("e2e", cfg, latency.e2e(**cfg))
         if "ablation" in todo:
-            latency.ablation("llama31-8b")
+            cfg = dict(arch="llama31-8b", B=4, context=32768)
+            emit("ablation", cfg, latency.ablation(**cfg))
         if "measured" in todo:
-            latency.measured()
+            cfg = dict(arch="granite-3-8b-smoke", B=2, T=256, steps=12)
+            emit("measured", cfg, latency.measured(**cfg))
     if todo & {"similarity", "correction"}:
         import similarity_correction
         if "similarity" in todo:
-            similarity_correction.model_query_similarity()
+            cfg = dict(arch="smollm-360m-smoke", train_steps=40)
+            emit("similarity", cfg,
+                 similarity_correction.model_query_similarity(**cfg))
         if "correction" in todo:
-            similarity_correction.correction_rates()
+            cfg = dict(arch="granite-3-8b-smoke", B=4, T=512, steps=48)
+            emit("correction", cfg,
+                 similarity_correction.correction_rates(**cfg))
     if "selection_ablation" in todo:
         import selection_ablation
-        selection_ablation.run()
-        selection_ablation.tau_sweep()
+        cfg = dict(arch="granite-3-8b-smoke", B=4, T=512)
+        emit("selection_ablation", cfg,
+             {"group_pool": selection_ablation.run(**cfg),
+              "tau_sweep": selection_ablation.tau_sweep(**cfg)})
+    if "quant" in todo:
+        import quant_quality
+        emit("quant_quality", quant_quality.SMOKE_CONFIG,
+             quant_quality.run(**quant_quality.SMOKE_CONFIG))
     if "roofline" in todo:
         import roofline_report
-        roofline_report.main()
+        emit("roofline", {"meshes": ["single", "multi"]},
+             roofline_report.main())
 
 
 if __name__ == "__main__":

@@ -1,7 +1,12 @@
 """Quickstart: FreeKV serving on CPU with a reduced model.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--kv-quant int8]
+
+``--kv-quant`` stores the offloaded KV pool at int8 / packed int4 with fused
+dequant-on-recall (src/repro/quant) — the completion prints the recall-bytes
+saving and host-pool compression from ``EngineMetrics.summary()["kv_quant"]``.
 """
+import argparse
 import os
 import sys
 
@@ -17,10 +22,16 @@ from repro.serving.engine import Request, ServeEngine
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--kv-quant", choices=("none", "int8", "int4"),
+                    default="none",
+                    help="quantized host KV tier for the offloaded pool")
+    args = ap.parse_args()
+
     cfg = get_config("smollm-360m-smoke")          # reduced llama-style model
     params = init_params(cfg, jax.random.PRNGKey(0))
     fkv = FreeKVConfig(method="freekv", page_size=8, budget=64, n_sink=8,
-                       n_window=8, tau=0.8)
+                       n_window=8, tau=0.8, kv_quant=args.kv_quant)
     engine = ServeEngine(cfg, fkv, params, max_len=256, batch_size=2)
 
     rng = np.random.default_rng(0)
@@ -34,6 +45,11 @@ def main():
               f"decode {out.decode_s/out.steps*1e3:.1f} ms/step, "
               f"correction_rate={out.stats['correction_rate']:.3f}, "
               f"query_similarity={out.stats['mean_similarity']:.3f}")
+    kq = engine.last_metrics.summary()["kv_quant"]
+    if kq["mode"] != "none":
+        print(f"kv_quant={kq['mode']}: block {kq['dense_block_bytes']} -> "
+              f"{kq['page_block_bytes']} B, saved {kq['bytes_saved']:.0f} B "
+              f"transfer, pool compression {kq['pool_compression']:.2f}x")
 
 
 if __name__ == "__main__":

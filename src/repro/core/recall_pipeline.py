@@ -88,9 +88,12 @@ class RecallExecutor:
 
     ``recall_fn(pool, idx)`` is the full K+V gather (jnp reference, chunked
     Pallas kernel, or shard-local recall); ``values_fn`` optionally the
-    V-only variant (ShadowKV). The executor is pure (safe under jit): the
-    overlap is expressed through dataflow — attention depends only on
-    ``use_k/use_v``, never on the staged arrays."""
+    V-only variant (ShadowKV). ``pool`` is opaque to the executor — the
+    retrievers pass the fp pool array, or a (packed pool, scales) pair under
+    the quantized host tier (``src/repro/quant``), and the gather backend
+    unpacks it. The executor is pure (safe under jit): the overlap is
+    expressed through dataflow — attention depends only on ``use_k/use_v``,
+    never on the staged arrays."""
 
     def __init__(self, recall_fn=None, values_fn=None):
         self.recall_fn = recall_fn or recall.recall_pages

@@ -33,6 +33,7 @@ from repro.core import paging, recall, selection
 from repro.core.correction import corrected_heads
 from repro.core.recall_pipeline import RecallExecutor
 from repro.models.layers import softcap
+from repro.quant import quantizers as qz
 
 NEG_INF = -1e30
 
@@ -134,7 +135,24 @@ class FreeKVRetriever:
         return (self.fkv.recall_overlap and self.speculative
                 and self.mesh is None)
 
+    def _pool_view(self, state):
+        """The opaque pool reference the recall executor threads through:
+        the fp pool array, or a (packed pool, fp32 scales) pair under the
+        quantized host tier — every gather backend unpacks the same way."""
+        if "pool_scale" in state:
+            return (state["pool"], state["pool_scale"])
+        return state["pool"]
+
     def _recall_values(self, pool, idx):
+        if isinstance(pool, tuple):                   # quantized host tier
+            pool_q, scales = pool
+            if self.use_kernels:
+                from repro.kernels import ops
+                return ops.recall_values_quant(
+                    pool_q, scales, idx, bits=self.fkv.quant_bits,
+                    chunk=self.fkv.recall_chunk_pages or None)
+            return qz.dequant_recall_values(pool_q, scales, idx,
+                                            self.fkv.quant_bits)
         if self.use_kernels:
             from repro.kernels import ops
             return ops.recall_values(pool, idx,
@@ -142,6 +160,19 @@ class FreeKVRetriever:
         return recall.recall_values_only(pool, idx)
 
     def _recall(self, pool, idx):
+        if isinstance(pool, tuple):                   # quantized host tier
+            # fused dequant-on-recall: packed page + scales move, bf16/fp
+            # never does. The page-sharded shard_map gather is fp-only; under
+            # a mesh the jnp dequant gather runs (correct under pjit, the
+            # partitioner handles it) — see docs/methods.md.
+            pool_q, scales = pool
+            if self.use_kernels and self.mesh is None:
+                from repro.kernels import ops
+                return ops.recall_gather_quant(
+                    pool_q, scales, idx, bits=self.fkv.quant_bits,
+                    chunk=self.fkv.recall_chunk_pages or None)
+            return qz.dequant_recall_pages(pool_q, scales, idx,
+                                           self.fkv.quant_bits)
         mesh = self.mesh
         if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
             if self.use_kernels:
@@ -173,7 +204,7 @@ class FreeKVRetriever:
         idx, _ = selection.select_pages(
             self.cfg, self.fkv, q_last, state["summ"], state["length"],
             self._n_sel(state))
-        sk, sv = self._recall(state["pool"], idx)
+        sk, sv = self._recall(self._pool_view(state), idx)
         return dict(state, sel_k=sk.astype(state["sel_k"].dtype),
                     sel_v=sv.astype(state["sel_v"].dtype), sel_idx=idx,
                     qprev=q_last.astype(state["qprev"].dtype))
@@ -182,6 +213,10 @@ class FreeKVRetriever:
         mesh = self.mesh
         if not (self.fkv.sharded_retrieval and mesh is not None
                 and "model" in getattr(mesh, "axis_names", ())):
+            return False
+        if self.fkv.kv_quant != "none":
+            # the fused shard-local step reads the fp pool directly; the
+            # quantized tier falls back to the plain (pjit-partitioned) path
             return False
         mp = mesh.shape["model"]
         n_sel = state["sel_idx"].shape[2]
@@ -242,7 +277,8 @@ class FreeKVRetriever:
         if self._overlap():
             # --- pipelined (§4): correction top-up on the critical path,
             # staged double-buffer refill off it (core/recall_pipeline) ----
-            pr = self.executor.step(state["pool"], new_idx, state["sel_idx"],
+            pr = self.executor.step(self._pool_view(state), new_idx,
+                                    state["sel_idx"],
                                     state["sel_k"], state["sel_v"], corr)
             use_k, use_v, use_idx = pr.use_k, pr.use_v, pr.use_idx
             new_k, new_v = pr.staged_k, pr.staged_v
@@ -250,7 +286,8 @@ class FreeKVRetriever:
             reused = pr.reused_blocks
         else:
             # --- synchronous reference: full blocking recall every step ----
-            new_k, new_v = self.executor.recall(state["pool"], new_idx)
+            new_k, new_v = self.executor.recall(self._pool_view(state),
+                                                new_idx)
             new_k = new_k.astype(state["sel_k"].dtype)
             new_v = new_v.astype(state["sel_v"].dtype)
             if self.speculative:                     # correction merge (§3.3)
@@ -308,7 +345,7 @@ class QuestRetriever(FreeKVRetriever):
         idx_g = idx_h.reshape(B, kv, G, n_sel)
         outs = []
         for g in range(G):
-            sk, sv = recall.recall_pages(state["pool"], idx_g[:, :, g])
+            sk, sv = self._recall(self._pool_view(state), idx_g[:, :, g])
             k_cat, v_cat, pos = _cat_regions(fkv, state, sk.astype(q.dtype),
                                              sv.astype(q.dtype),
                                              idx_g[:, :, g], p)
@@ -608,14 +645,15 @@ class ShadowKVRetriever(FreeKVRetriever):
         if fkv.recall_overlap and self.mesh is None:
             # executor delta-fetch: V pages already resident in the previous
             # step's buffer are reused bit-exactly; only misses transfer
-            pr = self.executor.step_values(state["pool"], idx,
+            pr = self.executor.step_values(self._pool_view(state), idx,
                                            state["sel_idx"], state["sel_v"])
             v_sel = pr.staged_v.astype(q.dtype)
             sync_pages = pr.topup_blocks // 2                       # V-only
             reused = pr.reused_blocks // 2
             state = dict(state, sel_v=pr.staged_v)
         else:
-            v_sel = self._recall_values(state["pool"], idx).astype(q.dtype)
+            v_sel = self._recall_values(self._pool_view(state),
+                                        idx).astype(q.dtype)
             sync_pages = jnp.sum(idx >= 0, axis=(1, 2)) // 2        # V-only
             reused = jnp.zeros((B,), jnp.int32)
         k_cat, v_cat, pos = _cat_regions(fkv, state, k_rec, v_sel, idx, p)

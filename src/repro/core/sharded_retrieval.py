@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig, FreeKVConfig
 from repro.core import selection
 from repro.models.layers import softcap as _softcap
@@ -203,7 +204,7 @@ def sharded_decode_step(cfg: ArchConfig, fkv: FreeKVConfig, mesh, state, q,
     rep2 = P(b, None)
     rep3 = P(b, None, None)
     rep4 = P(b, None, None, None)
-    out = jax.shard_map(
+    out = shard_map(
         f, mesh=mesh,
         in_specs=(pool_spec, summ_spec, sel_spec, sel_spec, idx_spec,
                   rep3, rep2, rep3, rep3, rep4, rep4, rep4, rep4, rep2, P(b)),

@@ -17,6 +17,7 @@ from repro.kernels.page_scores import page_scores as _scores
 from repro.kernels.page_summary import page_summary as _summary
 from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.recall_gather import recall_gather as _recall
+from repro.kernels.recall_gather import recall_gather_quant as _recall_quant
 
 
 def _default_interpret():
@@ -55,6 +56,25 @@ def recall_values(pool, idx, *, chunk=None, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
     _, v = _recall(pool, idx, values_only=True, chunk=chunk,
                    interpret=interpret)
+    return v
+
+
+def recall_gather_quant(pool, scales, idx, *, bits, out_dtype=jnp.float32,
+                        chunk=None, interpret=None):
+    """Fused dequant-on-recall from the packed int8/int4 host pool
+    (src/repro/quant): page payload + fp32 scales stream through the same
+    2-deep VMEM ring; dequant to ``out_dtype`` happens in-kernel."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _recall_quant(pool, scales, idx, bits=bits, out_dtype=out_dtype,
+                         chunk=chunk, interpret=interpret)
+
+
+def recall_values_quant(pool, scales, idx, *, bits, out_dtype=jnp.float32,
+                        chunk=None, interpret=None):
+    """V-only fused dequant recall (ShadowKV x quantized pool)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    _, v = _recall_quant(pool, scales, idx, bits=bits, out_dtype=out_dtype,
+                         values_only=True, chunk=chunk, interpret=interpret)
     return v
 
 

@@ -27,6 +27,12 @@ Contract (shared with ``core/recall.recall_pages`` and
 (``idx < 0``) produce zeros. Interpret-mode parity on CPU is covered by
 ``tests/test_recall_pipeline.py``; orchestration of *which* pages transfer
 on vs off the decode critical path lives in ``core/recall_pipeline.py``.
+
+``recall_gather_quant`` is the quantized-pool variant (``src/repro/quant``):
+the packed int8/int4 page and its fp32 scales ride the same ring as two DMAs
+per lane, and dequantization to the output dtype is fused into the drain —
+the transfer moves 2-4x fewer bytes and the fp page never exists outside
+VMEM. Parity vs the jnp dequant reference: ``tests/test_quant.py``.
 """
 from __future__ import annotations
 
@@ -98,6 +104,125 @@ def _kernel(idx_ref, pool_ref, k_ref, v_ref, scratch, sems, *,
         return 0
 
     jax.lax.fori_loop(0, n_chunks, body, 0)
+
+
+def _quant_kernel(idx_ref, pool_ref, scale_ref, k_ref, v_ref,
+                  scratch, sscratch, sems, ssems, *,
+                  n_sel, n_pages, chunk, n_chunks, values_only, bits,
+                  out_dtype):
+    """Quantized-pool variant: DMA the packed int page AND its fp32 scales
+    through the same 2-deep VMEM ring, dequantize on drain (fused — the fp
+    page never exists in host or HBM, only in VMEM on its way to the output
+    buffer). Dequant math matches ``repro.quant.quantizers.dequant_block``
+    exactly: int -> f32 * scale -> out_dtype."""
+    from repro.quant import quantizers as qz
+
+    b, h = pl.program_id(0), pl.program_id(1)
+
+    def lane_valid(i):
+        return (i < n_sel) & (idx_ref[b, h, jnp.minimum(i, n_sel - 1)] >= 0)
+
+    def page_of(i):
+        return jnp.clip(idx_ref[b, h, jnp.minimum(i, n_sel - 1)],
+                        0, n_pages - 1)
+
+    def dmas(slot, j, i):
+        src = pool_ref.at[b, page_of(i), h]
+        ssrc = scale_ref.at[b, page_of(i), h]
+        if values_only:
+            src = src.at[1]                    # V half of the packed block
+            ssrc = ssrc.at[1]
+        return (pltpu.make_async_copy(src, scratch.at[slot, j],
+                                      sems.at[slot, j]),
+                pltpu.make_async_copy(ssrc, sscratch.at[slot, j],
+                                      ssems.at[slot, j]))
+
+    def start_chunk(slot, c):
+        for j in range(chunk):                 # page + scale DMA per lane
+            i = c * chunk + j
+
+            @pl.when(lane_valid(i))
+            def _():
+                for cp in dmas(slot, j, i):
+                    cp.start()
+
+    start_chunk(0, 0)
+
+    def body(c, _):
+        slot = jax.lax.rem(c, 2)
+        nxt = jax.lax.rem(c + 1, 2)
+
+        @pl.when(c + 1 < n_chunks)
+        def _():
+            start_chunk(nxt, c + 1)
+
+        for j in range(chunk):
+            i = c * chunk + j
+            valid = lane_valid(i)
+
+            @pl.when(valid)
+            def _():
+                for cp in dmas(slot, j, i):
+                    cp.wait()
+
+            @pl.when(i < n_sel)
+            def _():
+                deq = qz.dequant_block(scratch[slot, j], sscratch[slot, j],
+                                       bits, out_dtype)
+                zero = jnp.zeros_like(deq[..., 0, :, :] if not values_only
+                                      else deq)
+                if values_only:
+                    k_ref[0, 0, i] = zero
+                    v_ref[0, 0, i] = jnp.where(valid, deq, zero)
+                else:
+                    k_ref[0, 0, i] = jnp.where(valid, deq[0], zero)
+                    v_ref[0, 0, i] = jnp.where(valid, deq[1], zero)
+        return 0
+
+    jax.lax.fori_loop(0, n_chunks, body, 0)
+
+
+def recall_gather_quant(pool, scales, idx, *, bits, values_only=False,
+                        out_dtype=jnp.float32, chunk=None, interpret=True):
+    """Fused dequant-on-recall gather from the packed host pool.
+
+    pool (B, n_pages, kv, 2, p, d_packed) int8 (packed int4 when bits=4);
+    scales (B, n_pages, kv, 2, n_groups) float32; idx (B, kv, n_sel) int32
+    (-1 pad) -> (k, v) each (B, kv, n_sel, p, d) in ``out_dtype``. Matches
+    ``repro.quant.quantizers.dequant_recall_pages`` bit-for-bit."""
+    B, n_pages, kv, _, p, dp = pool.shape
+    d = dp * (8 // bits)
+    n_g = scales.shape[-1]
+    n_sel = idx.shape[2]
+    chunk = max(1, min(chunk or 8, n_sel))
+    n_chunks = -(-n_sel // chunk)
+
+    ring = ((2, chunk, p, dp) if values_only else (2, chunk, 2, p, dp))
+    sring = ((2, chunk, n_g) if values_only else (2, chunk, 2, n_g))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, kv),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=[
+            pl.BlockSpec((1, 1, n_sel, p, d), lambda b, h, idx_ref: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, n_sel, p, d), lambda b, h, idx_ref: (b, h, 0, 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM(ring, pool.dtype),
+                        pltpu.VMEM(sring, scales.dtype),
+                        pltpu.SemaphoreType.DMA((2, chunk)),
+                        pltpu.SemaphoreType.DMA((2, chunk))],
+    )
+    out_shape = [jax.ShapeDtypeStruct((B, kv, n_sel, p, d), out_dtype),
+                 jax.ShapeDtypeStruct((B, kv, n_sel, p, d), out_dtype)]
+    kernel = functools.partial(
+        _quant_kernel, n_sel=n_sel, n_pages=n_pages, chunk=chunk,
+        n_chunks=n_chunks, values_only=values_only, bits=bits,
+        out_dtype=out_dtype)
+    k, v = pl.pallas_call(
+        kernel, grid_spec=grid_spec, out_shape=out_shape, interpret=interpret,
+    )(idx, pool, scales)
+    return k, v
 
 
 def recall_gather(pool, idx, *, values_only=False, chunk=None, interpret=True):

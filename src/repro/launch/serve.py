@@ -45,6 +45,12 @@ def main():
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable the overlapped recall pipeline (use the "
                          "synchronous blocking-recall reference path)")
+    ap.add_argument("--kv-quant", choices=("none", "int8", "int4"),
+                    default="none",
+                    help="quantized host KV tier: store the offloaded pool "
+                         "packed with fused dequant-on-recall")
+    ap.add_argument("--quant-group-size", type=int, default=0,
+                    help="channels per fp32 scale group (0 = per page half)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -52,7 +58,9 @@ def main():
     fkv = FreeKVConfig(method=args.method, page_size=args.page_size,
                        budget=args.budget, n_sink=args.page_size * 2,
                        n_window=args.page_size * 2, tau=args.tau,
-                       recall_overlap=not args.no_overlap)
+                       recall_overlap=not args.no_overlap,
+                       kv_quant=args.kv_quant,
+                       quant_group_size=args.quant_group_size)
     eng = ServeEngine(cfg, fkv, params,
                       max_len=args.context + args.new_tokens + args.page_size
                       + args.prefill_bucket,

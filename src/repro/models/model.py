@@ -22,6 +22,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.configs.base import (ArchConfig, FreeKVConfig, ATTN, ATTN_LOCAL,
                                 MAMBA, MLSTM, SLSTM, DENSE, MOE, NONE)
 from repro.models import attention as attn
@@ -394,7 +395,7 @@ def _cross_entropy(cfg, mesh, logits, tgt):
         ll = jax.lax.psum(jnp.where(hit, ll_loc, 0.0), "model")
         return lse - ll
 
-    return jax.shard_map(
+    return shard_map(
         ce_shard, mesh=mesh,
         in_specs=(P(bspec, None, "model"), P(bspec, None)),
         out_specs=P(bspec, None), check_vma=False)(logits, tgt)

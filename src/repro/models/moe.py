@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig
 from repro.models.layers import act_fn, dense_init, mlp_init, apply_mlp
 
@@ -143,7 +144,7 @@ def apply_moe(cfg: ArchConfig, params, x, mesh=None, data_axes=None,
             return y, aux
 
         bspec = P(d_axes if d_axes else None, None)
-        y, aux = jax.shard_map(
+        y, aux = shard_map(
             shard_fn, mesh=mesh,
             in_specs=(bspec, P(None, None), P(ep_axis, None, None),
                       P(ep_axis, None, None), P(ep_axis, None, None)),

@@ -1,0 +1,32 @@
+"""Quantized host KV tier: symmetric per-page, per-kv-head int8 / packed-int4
+storage for the offloaded pool, with fused dequantization on recall.
+
+FreeKV's recall cost is dominated by host->device bytes per decode step; the
+overlapped pipeline (``core/recall_pipeline``) hides that latency but does not
+shrink it. This package shrinks it: pages are quantized once at offload time
+(page completion / prefill — ``core/paging``), stored packed in the host pool,
+and dequantized exactly once on recall — inside the chunked double-buffered
+Pallas kernel (``kernels/recall_gather.recall_gather_quant``) or the pure-jnp
+reference (``dequant_recall_pages``). Summaries/selection stay full-precision
+(they are computed from the raw keys before quantization), so quantization
+affects only the *content* of recalled pages, never *which* pages are chosen.
+
+``FreeKVConfig.kv_quant`` selects the mode (``"none"`` | ``"int8"`` |
+``"int4"``); ``quant_group_size`` sets the channel-group width per fp32 scale
+(0 = one scale per page half). ``"none"`` is bit-identical to the
+unquantized framework: no extra state leaves, no graph changes.
+"""
+from repro.quant.quantizers import (dequant_block, dequant_recall_pages,
+                                    dequant_recall_values, effective_group,
+                                    pack_int4, quant_bits, quantize_block,
+                                    unpack_int4)
+from repro.quant.accounting import (DEQUANT_ELEMS_PER_S, page_block_bytes,
+                                    page_block_bytes_dense, pool_bytes_detail,
+                                    scale_bytes_per_block)
+
+__all__ = [
+    "DEQUANT_ELEMS_PER_S", "dequant_block", "dequant_recall_pages",
+    "dequant_recall_values", "effective_group", "pack_int4",
+    "page_block_bytes", "page_block_bytes_dense", "pool_bytes_detail",
+    "quant_bits", "quantize_block", "scale_bytes_per_block", "unpack_int4",
+]

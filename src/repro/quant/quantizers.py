@@ -1,0 +1,130 @@
+"""Symmetric per-page, per-kv-head KV quantizers (pure JAX).
+
+Layout contract (mirrors the HND pool of ``core/paging``):
+
+  * fp pool block   ``(..., 2, p, d)``      — K+V halves of one page
+  * int8 pool block ``(..., 2, p, d)``      int8
+  * int4 pool block ``(..., 2, p, d//2)``   int8, two nibbles per byte:
+    channels ``[0, d/2)`` in the low nibble, ``[d/2, d)`` in the high nibble
+    (halves, not interleaved, so channel groups stay contiguous after unpack)
+  * scales          ``(..., 2, n_groups)``  float32, ``n_groups = d // g``
+
+Quantization is symmetric absmax: one scale per (page, kv-head, K|V half,
+channel group), amax taken over the page's ``p`` tokens x ``g`` channels.
+``g = effective_group(group_size, d)`` — ``group_size == 0`` means one scale
+per page half (``g = d``). Zero pages get scale 1 so dequant stays exact
+zeros. Round-trip error is bounded by ``scale / 2`` per element (plus float
+rounding), verified by ``tests/test_quant.py`` property tests.
+
+The gather + dequant reference path (``dequant_recall_pages``) shares the
+``(pool, idx) -> (k, v)`` contract of ``core/recall.recall_pages``: invalid
+(``idx < 0``) lanes produce exact zeros. The fused kernel
+(``kernels/recall_gather.recall_gather_quant``) must match it bit-for-bit in
+interpret mode — both dequantize as ``int -> float32 * scale -> out_dtype``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_QMAX = {8: 127, 4: 7}
+
+
+def quant_bits(kv_quant: str) -> int:
+    """Bits per stored element for a ``FreeKVConfig.kv_quant`` mode (0=off)."""
+    return {"none": 0, "int8": 8, "int4": 4}[kv_quant]
+
+
+def effective_group(group_size: int, d: int) -> int:
+    """Channel-group width per scale; 0 -> whole page half (one scale)."""
+    g = group_size if group_size > 0 else d
+    if d % g:
+        raise ValueError(f"quant_group_size {g} does not divide d_head {d}")
+    return g
+
+
+# ---------------------------------------------------------------------------
+# int4 packing (two values per int8 byte, halves layout)
+# ---------------------------------------------------------------------------
+def pack_int4(q):
+    """int8 values in [-8, 7], even last dim d -> int8 packed (..., d//2).
+
+    Byte j holds channel j in the low nibble and channel j + d/2 in the high
+    nibble; ``unpack_int4`` is its exact inverse."""
+    d = q.shape[-1]
+    assert d % 2 == 0, d
+    d2 = d // 2
+    lo = q[..., :d2] & jnp.int8(0xF)
+    hi = q[..., d2:] & jnp.int8(0xF)
+    return lo | (hi << 4)
+
+
+def unpack_int4(packed):
+    """int8 packed (..., d//2) -> int8 values in [-8, 7] (..., d)."""
+    lo = (packed << 4) >> 4            # arithmetic shifts sign-extend nibbles
+    hi = packed >> 4
+    return jnp.concatenate([lo, hi], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# block quantize / dequantize
+# ---------------------------------------------------------------------------
+def quantize_block(block, bits: int, group_size: int = 0):
+    """fp pool block (..., 2, p, d) -> (q int8 (..., 2, p, d_packed),
+    scale float32 (..., 2, n_groups))."""
+    qmax = _QMAX[bits]
+    p, d = block.shape[-2], block.shape[-1]
+    g = effective_group(group_size, d)
+    n_g = d // g
+    xf = block.astype(jnp.float32)
+    xg = xf.reshape(*block.shape[:-2], p, n_g, g)
+    amax = jnp.abs(xg).max(axis=(-3, -1))              # (..., 2, n_g)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(xg / scale[..., None, :, None]), -qmax, qmax)
+    q = q.astype(jnp.int8).reshape(*block.shape[:-2], p, d)
+    if bits == 4:
+        q = pack_int4(q)
+    return q, scale
+
+
+def dequant_block(q, scale, bits: int, out_dtype=jnp.float32):
+    """Inverse of ``quantize_block``: (q, scale) -> fp block (..., 2, p, d)."""
+    if bits == 4:
+        q = unpack_int4(q)
+    p, d = q.shape[-2], q.shape[-1]
+    n_g = scale.shape[-1]
+    g = d // n_g
+    xf = q.astype(jnp.float32).reshape(*q.shape[:-2], p, n_g, g)
+    xf = xf * scale.astype(jnp.float32)[..., None, :, None]
+    return xf.reshape(*q.shape[:-2], p, d).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# gather + dequant (the jnp reference recall path; kernel parity target)
+# ---------------------------------------------------------------------------
+def _gather_blocks(pool, scales, idx):
+    B, n_pages, kv = pool.shape[0], pool.shape[1], pool.shape[2]
+    safe = jnp.clip(idx, 0, n_pages - 1)
+    bI = jnp.arange(B)[:, None, None]
+    kI = jnp.arange(kv)[None, :, None]
+    return pool[bI, safe, kI], scales[bI, safe, kI]
+
+
+def dequant_recall_pages(pool, scales, idx, bits: int, out_dtype=jnp.float32):
+    """Quantized-pool recall: pool (B, n_pages, kv, 2, p, d_packed) int8;
+    scales (B, n_pages, kv, 2, n_g) f32; idx (B, kv, n_sel) int32 (-1 invalid)
+    -> (k, v) each (B, kv, n_sel, p, d) in ``out_dtype``, invalid -> zeros."""
+    blk, sc = _gather_blocks(pool, scales, idx)        # (B,kv,n,2,p,dp)
+    deq = dequant_block(blk, sc, bits, out_dtype)
+    deq = jnp.where((idx >= 0)[..., None, None, None], deq,
+                    jnp.zeros((), out_dtype))
+    return deq[..., 0, :, :], deq[..., 1, :, :]
+
+
+def dequant_recall_values(pool, scales, idx, bits: int,
+                          out_dtype=jnp.float32):
+    """ShadowKV-style V-only recall from the quantized pool (half the
+    payload; K output is reconstructed elsewhere)."""
+    blk, sc = _gather_blocks(pool, scales, idx)
+    v = dequant_block(blk[..., 1:, :, :], sc[..., 1:, :], bits, out_dtype)
+    v = v[..., 0, :, :]
+    return jnp.where((idx >= 0)[..., None, None], v, jnp.zeros((), out_dtype))

@@ -118,9 +118,27 @@ class ServeEngine:
     # ------------------------------------------------------------------
     @property
     def page_block_bytes(self) -> int:
-        """Bytes of one (kv-head, page) K+V block — the recall transfer unit."""
+        """Bytes of one (kv-head, page) K+V block — the recall transfer unit.
+        Under the quantized host tier this is the *packed* unit (int payload
+        + fp32 scales); identical to the dense block when kv_quant='none'."""
+        from repro.quant import page_block_bytes
         itemsize = jnp.dtype(self.state_dtype).itemsize
-        return 2 * self.fkv.page_size * self.cfg.d_head * itemsize
+        return page_block_bytes(self.fkv, self.cfg.d_head, itemsize)
+
+    def _apply_quant_metrics(self, em: EngineMetrics):
+        """Fill the kv_quant section: dense-equivalent block bytes plus the
+        slot pool's physical vs dense host-tier footprint."""
+        from repro.quant import page_block_bytes_dense, pool_bytes_detail
+        itemsize = jnp.dtype(self.state_dtype).itemsize
+        em.kv_quant = self.fkv.kv_quant
+        em.dense_block_bytes = page_block_bytes_dense(
+            self.fkv, self.cfg.d_head, itemsize)
+        em.dequant_elems_per_block = 2 * self.fkv.page_size * self.cfg.d_head
+        if self._pool is not None:
+            detail = pool_bytes_detail(self._pool.state, self.cfg.d_head,
+                                       dense_itemsize=itemsize)
+            em.pool_bytes_physical = float(detail["physical"])
+            em.pool_bytes_dense = float(detail["dense"])
 
     def make_slot_pool(self, num_slots: int) -> SlotPool:
         return SlotPool(self.cfg, self.fkv, num_slots, self.max_len,
@@ -223,6 +241,8 @@ class ServeEngine:
         em = EngineMetrics(num_slots=self.batch_size, scheduler="static")
         from repro.core.offload import host_offload_active
         em.transfer_is_dma = host_offload_active(self.fkv)
+        em.page_block_bytes = self.page_block_bytes
+        self._apply_quant_metrics(em)
         em.wall_s = time.perf_counter() - t0
         em.requests = [RequestMetrics(uid=c.uid, prompt_tokens=len(r.tokens),
                                       max_new_tokens=r.max_new_tokens,
@@ -243,6 +263,7 @@ class ServeEngine:
         tracked, em = sched.run(requests, seed)
         from repro.core.offload import pool_on_host
         em.transfer_is_dma = pool_on_host(self._pool.state)
+        self._apply_quant_metrics(em)
         if self.prefix_cache is not None:
             em.prefix_cache = self.prefix_cache.stats()
         self.last_metrics = em

@@ -62,6 +62,7 @@ class SlotPool:
         self.cfg, self.fkv = cfg, fkv
         self.num_slots = num_slots
         self.max_len = max_len
+        self.state_dtype = state_dtype
         self._init_full = jax.jit(
             lambda: init_decode_state(cfg, fkv, num_slots, max_len,
                                       state_dtype))
@@ -104,6 +105,21 @@ class SlotPool:
             self.state = self._splice(self.state, self._template,
                                       jnp.int32(slot))
         self._dirty.clear()
+
+    def pool_bytes(self) -> int:
+        """Physical host-tier bytes (packed pool payload + quant scales)
+        across every slot and layer — what the host actually holds."""
+        from repro.core.offload import pool_bytes
+        return pool_bytes(self.state)
+
+    def pool_bytes_detail(self) -> dict:
+        """Payload/scales/physical/dense breakdown of the pool footprint;
+        ``ratio`` is the effective host-capacity multiplier the quantized
+        tier buys (1.0 when kv_quant='none')."""
+        from repro.quant import pool_bytes_detail
+        return pool_bytes_detail(
+            self.state, self.cfg.d_head,
+            dense_itemsize=jnp.dtype(self.state_dtype).itemsize)
 
     # -- state surgery -------------------------------------------------
     def insert(self, src_state, slot: int):

@@ -72,6 +72,14 @@ class EngineMetrics:
     reused_pages: float = 0.0
     dropped_pages: float = 0.0
     page_block_bytes: int = 0         # bytes of one (kv-head, page) K+V block
+    # quantized host KV tier (src/repro/quant): with kv_quant != "none",
+    # page_block_bytes is the *packed* transfer unit (payload + fp32 scales)
+    # and these carry the dense-equivalent comparison + dequant accounting
+    kv_quant: str = "none"
+    dense_block_bytes: int = 0        # unquantized block bytes (same dtype)
+    dequant_elems_per_block: int = 0  # elements dequantized per moved block
+    pool_bytes_physical: float = 0.0  # slot-pool host-tier bytes (packed)
+    pool_bytes_dense: float = 0.0     # same capacity unquantized
     # True when the pool lives in pinned_host memory (real host->device DMA);
     # False under offload='sim' (transfers are cost-model-accounted only)
     transfer_is_dma: bool = False
@@ -112,6 +120,32 @@ class EngineMetrics:
         return self.async_pages * self.page_block_bytes
 
     @property
+    def moved_page_blocks(self) -> float:
+        """(kv-head, page) blocks that actually transferred (sync + async —
+        reused blocks moved nothing)."""
+        return self.sync_pages + self.async_pages
+
+    @property
+    def transfer_bytes_saved(self) -> float:
+        """Host->device bytes the quantized tier removed vs a dense pool of
+        the same dtype (moved blocks x per-block shrink). 0 when off."""
+        if self.kv_quant == "none" or not self.dense_block_bytes:
+            return 0.0
+        return self.moved_page_blocks * (self.dense_block_bytes
+                                         - self.page_block_bytes)
+
+    @property
+    def dequant_overhead_s(self) -> float:
+        """Cost-model estimate of cumulative fused-dequant time (every moved
+        block is dequantized exactly once on recall). Measured per-step
+        overhead comes from ``benchmarks/quant_quality.py``."""
+        if self.kv_quant == "none":
+            return 0.0
+        from repro.quant import DEQUANT_ELEMS_PER_S
+        return (self.moved_page_blocks * self.dequant_elems_per_block
+                / DEQUANT_ELEMS_PER_S)
+
+    @property
     def hidden_fraction(self) -> float:
         """Fraction of transferred recall bytes hidden behind compute.
 
@@ -147,6 +181,19 @@ class EngineMetrics:
                 "dropped_in_flight_bytes":
                     self.dropped_pages * self.page_block_bytes,
                 "transfer_is_dma": self.transfer_is_dma,
+            },
+            "kv_quant": {
+                "mode": self.kv_quant,
+                "page_block_bytes": self.page_block_bytes,
+                "dense_block_bytes": self.dense_block_bytes,
+                "moved_page_blocks": self.moved_page_blocks,
+                "bytes_saved": self.transfer_bytes_saved,
+                "dequant_overhead_s": self.dequant_overhead_s,
+                "pool_bytes_physical": self.pool_bytes_physical,
+                "pool_bytes_dense": self.pool_bytes_dense,
+                "pool_compression": (self.pool_bytes_dense
+                                     / self.pool_bytes_physical
+                                     if self.pool_bytes_physical else 1.0),
             },
             "prefix_cache": dict(self.prefix_cache),
         }

@@ -128,13 +128,14 @@ def decode_state_spec(cfg: ArchConfig, mesh, path: str, leaf,
     if sharded_r:
         # sharded speculative retrieval (§Perf): pool page-sharded, selected
         # buffers sharded over the n_sel dim — all retrieval ops shard-local
-        if key in ("pool", "summ") and _div(shape[1], mesh, ("model",)):
+        if key in ("pool", "pool_scale", "summ") \
+                and _div(shape[1], mesh, ("model",)):
             return out("model", *([None] * (nd - 2)))
         if key in ("sel_k", "sel_v") and _div(shape[2], mesh, ("model",)):
             return out(None, "model", None, None)
         if key == "sel_idx" and _div(shape[2], mesh, ("model",)):
             return out(None, "model")
-    if key in ("pool", "summ"):
+    if key in ("pool", "pool_scale", "summ"):
         # (B, n_pages, kv, ...)
         n_pages = shape[1]
         if kv_div:

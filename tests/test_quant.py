@@ -1,0 +1,310 @@
+"""Quantized host KV tier (src/repro/quant): quantizer round-trip bounds,
+int4 pack/unpack exactness, fused dequant kernel parity vs the jnp reference,
+``kv_quant="none"`` bit-identity through engine slot turnover, and the
+accuracy / byte-accounting invariants of the quantized recall path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import FreeKVConfig
+from repro.core import paging
+from repro.core.retrieval import make_retriever
+from repro.quant import (accounting, dequant_block, dequant_recall_pages,
+                         dequant_recall_values, pack_int4, quantize_block,
+                         unpack_int4)
+
+KEY = jax.random.PRNGKey(0)
+
+FKV_BASE = dict(method="freekv", page_size=8, budget=48, n_sink=8, n_window=8,
+                tau=0.8, svd_rank=32)
+
+
+# ---------------------------------------------------------------------------
+# property tests: pack/unpack exactness + round-trip error bounds
+# (hypothesis-driven when installed — CI — seeded sweep otherwise)
+# ---------------------------------------------------------------------------
+def _check_pack_unpack(seed, d, lead):
+    """pack_int4 ∘ unpack_int4 is the identity on the full int4 range."""
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-8, 8, size=(lead, d), dtype=np.int8)
+    out = np.asarray(unpack_int4(pack_int4(jnp.asarray(q))))
+    np.testing.assert_array_equal(out, q)
+
+
+def _check_roundtrip_bound(seed, bits, group, scale_pow):
+    """Symmetric absmax round-trip error is <= scale/2 per element, for any
+    data magnitude, both bit widths, and per-page or grouped scales."""
+    rng = np.random.default_rng(seed)
+    p, d = 8, 32
+    x = (10.0 ** scale_pow) * rng.standard_normal((2, 2, p, d))
+    x = jnp.asarray(x, jnp.float32)
+    q, s = quantize_block(x, bits, group)
+    deq = np.asarray(dequant_block(q, s, bits))
+    g = group or d
+    n_g = d // g
+    err = np.abs(deq - np.asarray(x)).reshape(2, 2, p, n_g, g)
+    bound = np.asarray(s)[:, :, None, :, None] * 0.5001 + 1e-30
+    assert (err <= bound).all()
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    SETTINGS = settings(max_examples=25, deadline=None)
+
+    @given(seed=st.integers(0, 2 ** 31 - 1),
+           d=st.sampled_from([2, 8, 32, 64]),
+           lead=st.integers(1, 5))
+    @SETTINGS
+    def test_int4_pack_unpack_exact(seed, d, lead):
+        _check_pack_unpack(seed, d, lead)
+
+    @given(seed=st.integers(0, 2 ** 31 - 1),
+           bits=st.sampled_from([8, 4]),
+           group=st.sampled_from([0, 8, 16]),
+           scale_pow=st.integers(-3, 3))
+    @SETTINGS
+    def test_roundtrip_error_bound(seed, bits, group, scale_pow):
+        _check_roundtrip_bound(seed, bits, group, scale_pow)
+
+except ImportError:                       # container without hypothesis
+
+    @pytest.mark.parametrize("seed", range(8))
+    @pytest.mark.parametrize("d,lead", [(2, 1), (8, 3), (32, 5), (64, 2)])
+    def test_int4_pack_unpack_exact(seed, d, lead):
+        _check_pack_unpack(seed, d, lead)
+
+    @pytest.mark.parametrize("seed", range(4))
+    @pytest.mark.parametrize("bits", [8, 4])
+    @pytest.mark.parametrize("group", [0, 8, 16])
+    @pytest.mark.parametrize("scale_pow", [-3, 0, 3])
+    def test_roundtrip_error_bound(seed, bits, group, scale_pow):
+        _check_roundtrip_bound(seed, bits, group, scale_pow)
+
+
+def test_quantize_zero_page_exact():
+    """All-zero pages (pool padding) survive the round trip exactly."""
+    x = jnp.zeros((3, 2, 8, 16), jnp.float32)
+    q, s = quantize_block(x, 4, 0)
+    np.testing.assert_array_equal(np.asarray(dequant_block(q, s, 4)), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# fused dequant recall kernel parity vs the jnp reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bits,group", [(8, 0), (8, 16), (4, 0), (4, 8)])
+@pytest.mark.parametrize("n_sel,chunk", [(5, 2), (6, 6), (1, 8)])
+def test_quant_kernel_parity(bits, group, n_sel, chunk):
+    """recall_gather_quant (2-deep VMEM ring, page+scale DMA, in-kernel
+    dequant) matches dequant_recall_pages bit-for-bit in interpret mode,
+    including invalid (-1) lanes and non-divisible chunk tails."""
+    from repro.kernels import ops
+    B, n_pages, kv, p, d = 2, 12, 3, 8, 32
+    pool_f = jax.random.normal(KEY, (B, n_pages, kv, 2, p, d))
+    pool_q, scales = quantize_block(pool_f, bits, group)
+    idx = jax.random.randint(jax.random.fold_in(KEY, 7 * bits + n_sel),
+                             (B, kv, n_sel), -2, n_pages).astype(jnp.int32)
+    k1, v1 = ops.recall_gather_quant(pool_q, scales, idx, bits=bits,
+                                     chunk=chunk)
+    k2, v2 = dequant_recall_pages(pool_q, scales, idx, bits)
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    vo = ops.recall_values_quant(pool_q, scales, idx, bits=bits, chunk=chunk)
+    np.testing.assert_array_equal(
+        np.asarray(vo),
+        np.asarray(dequant_recall_values(pool_q, scales, idx, bits)))
+
+
+def test_invalid_lanes_are_zero():
+    pool_f = jax.random.normal(KEY, (1, 4, 2, 2, 8, 16))
+    pool_q, scales = quantize_block(pool_f, 8, 0)
+    idx = jnp.full((1, 2, 3), -1, jnp.int32)
+    k, v = dequant_recall_pages(pool_q, scales, idx, 8)
+    np.testing.assert_array_equal(np.asarray(k), 0.0)
+    np.testing.assert_array_equal(np.asarray(v), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# paging: quantize-at-offload keeps decode-time pages == prefill pages
+# ---------------------------------------------------------------------------
+def test_append_token_offloads_quantized_page(smoke_cfg):
+    """A page completed during decode is quantized exactly like a prefill
+    page of the same content (one quantization, at offload time)."""
+    cfg = smoke_cfg
+    fkv = FreeKVConfig(kv_quant="int8", **FKV_BASE)
+    kv, d = cfg.n_kv_heads, cfg.d_head
+    p = fkv.page_size
+    st = paging.init_kv_state(cfg, fkv, 1, 64, jnp.float32)
+    assert st["pool"].dtype == jnp.int8 and "pool_scale" in st
+    toks = jax.random.normal(KEY, (2 * p, kv, d))
+    for t in range(2 * p):
+        st = paging.append_token(st, toks[None, t], toks[None, t])
+    # pages 0 and 1 hold tokens [0, p) and [p, 2p)
+    hnd = paging.nhd_pages_to_hnd(
+        toks[None].reshape(1, 2, p, kv, d), toks[None].reshape(1, 2, p, kv, d))
+    qref, sref = quantize_block(hnd, 8, fkv.quant_group_size)
+    np.testing.assert_array_equal(np.asarray(st["pool"][:, :2]),
+                                  np.asarray(qref))
+    np.testing.assert_array_equal(np.asarray(st["pool_scale"][:, :2]),
+                                  np.asarray(sref))
+
+
+def test_none_state_has_no_quant_leaves(smoke_cfg):
+    st = paging.init_kv_state(smoke_cfg, FreeKVConfig(**FKV_BASE), 1, 64,
+                              jnp.float32)
+    assert "pool_scale" not in st and st["pool"].dtype == jnp.float32
+    assert paging.quant_info(st) is None
+
+
+# ---------------------------------------------------------------------------
+# retrievers: quantized recall stays close; pipeline invariant survives quant
+# ---------------------------------------------------------------------------
+def _setup(cfg, fkv, B=2, T=96, max_len=160):
+    kv, d, H = cfg.n_kv_heads, cfg.d_head, cfg.n_heads
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, T, kv, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, T, kv, d))
+    q_last = jax.random.normal(jax.random.fold_in(KEY, 3), (B, H, d))
+    r = make_retriever(cfg, fkv)
+    return r, r.prefill(r.init_state(B, max_len, jnp.float32), k, v, q_last)
+
+
+def _steps(cfg, r, st, n=6):
+    outs = []
+    for t in range(n):
+        kq = jax.random.fold_in(KEY, 100 + t)
+        q = jax.random.normal(kq, (2, cfg.n_heads, cfg.d_head))
+        kn = jax.random.normal(jax.random.fold_in(kq, 1),
+                               (2, cfg.n_kv_heads, cfg.d_head))
+        vn = jax.random.normal(jax.random.fold_in(kq, 2),
+                               (2, cfg.n_kv_heads, cfg.d_head))
+        o, st, info = r.decode(st, q, kn, vn)
+        outs.append(np.asarray(o))
+    return outs, st, info
+
+
+@pytest.mark.parametrize("method", ["freekv", "arkvale", "quest", "shadowkv"])
+def test_quant_decode_close_to_fp(smoke_cfg, method):
+    """int8 recall stays within ~2% of the fp path for every retriever that
+    reads the pool; the transfer accounting (block counts) is unchanged —
+    quantization shrinks bytes/block, never the schedule."""
+    cfg = smoke_cfg
+    outs = {}
+    infos = {}
+    for mode in ("none", "int8"):
+        fkv = FreeKVConfig(kv_quant=mode, **{**FKV_BASE, "method": method})
+        r, st = _setup(cfg, fkv)
+        outs[mode], _, infos[mode] = _steps(cfg, r, st)
+    for a, b in zip(outs["none"], outs["int8"]):
+        rel = np.linalg.norm(a - b) / max(np.linalg.norm(a), 1e-6)
+        assert rel < 0.02, rel
+    np.testing.assert_array_equal(np.asarray(infos["none"]["sync_pages"]),
+                                  np.asarray(infos["int8"]["sync_pages"]))
+
+
+def test_pipeline_bit_identical_under_quant(smoke_cfg):
+    """The PR-2 invariant extends to the quantized tier: pool pages are still
+    written once and dequant is deterministic, so overlapped vs synchronous
+    recall stays bit-identical at int8/int4 too."""
+    cfg = smoke_cfg
+    for mode in ("int8", "int4"):
+        outs = {}
+        for overlap in (False, True):
+            fkv = FreeKVConfig(kv_quant=mode, recall_overlap=overlap,
+                               **FKV_BASE)
+            r, st = _setup(cfg, fkv)
+            outs[overlap], _, _ = _steps(cfg, r, st)
+        for a, b in zip(outs[True], outs[False]):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_quant_kernel_path_matches_jnp_path(smoke_cfg):
+    """use_kernels=True routes recall through the fused dequant kernel; the
+    recalled pages are bit-identical to the jnp dequant gather."""
+    cfg = smoke_cfg
+    outs = {}
+    for uk in (False, True):
+        fkv = FreeKVConfig(kv_quant="int8", use_kernels=uk,
+                           recall_chunk_pages=2, **FKV_BASE)
+        r, st = _setup(cfg, fkv)
+        outs[uk], _, _ = _steps(cfg, r, st, n=2)
+    for a, b in zip(outs[False], outs[True]):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine: kv_quant="none" bit-identity through slot turnover + accounting
+# ---------------------------------------------------------------------------
+def _generate(fkv, prompts, cfg, params):
+    from repro.serving.engine import Request, ServeEngine
+    from repro.serving.sampling import SamplerConfig
+    eng = ServeEngine(cfg, fkv, params, max_len=160, batch_size=2,
+                      sampler=SamplerConfig(temperature=0.0))
+    reqs = [Request(uid=i, tokens=p, max_new_tokens=4 + 3 * (i % 2))
+            for i, p in enumerate(prompts)]          # staggered -> turnover
+    outs = eng.generate(reqs)
+    return [o.tokens for o in outs], eng
+
+
+def test_engine_none_bit_identity_and_quant_accounting():
+    """Greedy outputs with kv_quant="none" are bit-identical pipeline on/off
+    through continuous-batching slot turnover (the quant plumbing adds no
+    leaves and changes no graph), and the quantized modes report shrunken
+    blocks / pool bytes through EngineMetrics.summary()["kv_quant"]."""
+    from repro.models.model import init_params
+    cfg = get_config("smollm-360m-smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+               for _ in range(4)]
+    toks = {}
+    engines = {}
+    for mode in ("none", "int8"):
+        for overlap in (False, True):
+            fkv = FreeKVConfig(kv_quant=mode, recall_overlap=overlap,
+                               **FKV_BASE)
+            toks[(mode, overlap)], engines[mode] = _generate(
+                fkv, prompts, cfg, params)
+        assert toks[(mode, True)] == toks[(mode, False)]
+
+    em_none = engines["none"].last_metrics
+    em_q = engines["int8"].last_metrics
+    sq = em_q.summary()["kv_quant"]
+    sn = em_none.summary()["kv_quant"]
+    # dense accounting unchanged when off
+    assert sn["mode"] == "none" and sn["bytes_saved"] == 0.0
+    assert sn["page_block_bytes"] == sn["dense_block_bytes"]
+    # quantized: packed block strictly smaller, savings and dequant overhead
+    # proportional to moved blocks, pool physically compressed
+    assert sq["page_block_bytes"] < sq["dense_block_bytes"]
+    assert sq["moved_page_blocks"] > 0
+    assert sq["bytes_saved"] == pytest.approx(
+        sq["moved_page_blocks"]
+        * (sq["dense_block_bytes"] - sq["page_block_bytes"]))
+    assert sq["dequant_overhead_s"] > 0
+    assert sq["pool_bytes_physical"] < sq["pool_bytes_dense"]
+    assert sq["pool_compression"] > 3.0          # int8 vs fp32 state dtype
+    # slot-pool accounting agrees with the offload walk
+    pool = engines["int8"]._pool
+    assert pool.pool_bytes() == pytest.approx(sq["pool_bytes_physical"])
+    detail = pool.pool_bytes_detail()
+    assert detail["physical"] == pool.pool_bytes()
+    assert detail["scales"] > 0 and detail["ratio"] > 3.0
+
+
+def test_block_bytes_accounting():
+    """The packed transfer unit: payload + fp32 scales, and the advertised
+    >=1.9x (int8) / >=3.5x (int4) reductions vs the fp16 dense block."""
+    for p, d, g in [(32, 128, 0), (32, 128, 32), (16, 64, 16)]:
+        dense = accounting.page_block_bytes_dense(
+            FreeKVConfig(page_size=p), d, itemsize=2)
+        assert dense == 2 * p * d * 2
+        f8 = FreeKVConfig(page_size=p, kv_quant="int8", quant_group_size=g)
+        f4 = FreeKVConfig(page_size=p, kv_quant="int4", quant_group_size=g)
+        b8 = accounting.page_block_bytes(f8, d, itemsize=2)
+        b4 = accounting.page_block_bytes(f4, d, itemsize=2)
+        n_g = d // (g or d)
+        assert b8 == 2 * p * d + 2 * n_g * 4
+        assert b4 == p * d + 2 * n_g * 4
+        assert dense / b8 >= 1.9 and dense / b4 >= 3.5

@@ -203,8 +203,9 @@ def test_host_offload_placement(smoke_cfg, small_fkv):
                                (2, smoke_cfg.n_heads, smoke_cfg.d_head))
     st = r.prefill(st, k, v, q_last)
     st = place_decode_state(st, fkv)
+    from repro.core.offload import host_memory_kind
     kinds = {getattr(st["pool"].sharding, "memory_kind", None)}
-    assert kinds <= {"pinned_host", None}
+    assert kinds <= {host_memory_kind(), None}
     assert pool_bytes(st) > 0
     q, kn, vn = _decode_inputs(smoke_cfg, 2, 0)
     try:
