@@ -1,0 +1,141 @@
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=2")
+
+"""Tensor-parallel serving scaling sweep (must run in its own process: it
+forces XLA host devices before jax initializes).
+
+Runs the serving-throughput mixed-length continuous-batching traffic through
+``ServeEngine(tp=1)`` and ``ServeEngine(tp=2)`` for every
+(recall_overlap, kv_quant) combination and reports
+
+  * **bit_identical** — greedy token streams must match exactly across tp
+    (the KV-head-group sharding's defining property; any False fails CI via
+    ``tools/check_bench.py``);
+  * throughput (tokens/s; CPU-relative — forced host devices share the same
+    silicon, so tp=2 wall-clock measures sharding *overhead*, not speedup:
+    the per-shard numbers below carry the scaling story);
+  * **per-shard host-link traffic** — each shard moves 1/tp of every
+    transfer class over its own host link, the quantity that actually
+    scales serving (recall bandwidth per device halves at tp=2).
+
+    PYTHONPATH=src python benchmarks/sharded_throughput.py [--smoke]
+
+Writes the ``BENCH_sharded.json`` trajectory file (schema: _common.bench_json).
+"""
+import argparse
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.configs.base import FreeKVConfig  # noqa: E402
+from repro.models.model import init_params  # noqa: E402
+from repro.serving.engine import Request, ServeEngine  # noqa: E402
+from repro.serving.sampling import SamplerConfig  # noqa: E402
+
+SMOKE = dict(arch="granite-3-8b-smoke", context=96, requests=6, slots=3,
+             short_new=4, long_new=8, bucket=48, page_size=8, budget=48)
+FULL = dict(arch="granite-3-8b-smoke", context=256, requests=10, slots=4,
+            short_new=4, long_new=16, bucket=64, page_size=16, budget=96)
+
+
+def mixed_requests(cfg, context, n, short_new, long_new, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        short = i % 2 == 0
+        n_ctx = context // 2 if short else context
+        prompt = rng.integers(0, cfg.vocab_size, n_ctx).astype(np.int32)
+        reqs.append(Request(uid=i, tokens=prompt,
+                            max_new_tokens=short_new if short else long_new))
+    return reqs
+
+
+def run(arch, context, requests, slots, short_new, long_new, bucket,
+        page_size, budget, tps=(1, 2), quiet=False):
+    cfg = get_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    base = dict(method="freekv", page_size=page_size, budget=budget,
+                n_sink=page_size, n_window=page_size, tau=0.8)
+    max_len = context + long_new + 2 * bucket
+    metrics = {"bit_identical": True, "configs": {}}
+
+    for overlap in (True, False):
+        for quant in ("none", "int8"):
+            name = f"overlap={int(overlap)}/quant={quant}"
+            tokens, summaries = {}, {}
+            for tp in tps:
+                fkv = FreeKVConfig(**base, recall_overlap=overlap,
+                                   kv_quant=quant)
+                eng = ServeEngine(cfg, fkv, params, max_len=max_len,
+                                  batch_size=slots,
+                                  sampler=SamplerConfig(temperature=0.0),
+                                  scheduler="continuous",
+                                  prefill_bucket=bucket, tp=tp)
+                reqs = mixed_requests(cfg, context, requests, short_new,
+                                      long_new)
+                eng.generate(reqs)              # warmup: compile all shapes
+                outs = eng.generate(mixed_requests(cfg, context, requests,
+                                                   short_new, long_new))
+                tokens[tp] = [c.tokens for c in outs]
+                summaries[tp] = eng.last_metrics.summary()
+            ident = all(tokens[tp] == tokens[tps[0]] for tp in tps)
+            metrics["bit_identical"] &= ident
+            row = {"bit_identical": bool(ident)}
+            for tp in tps:
+                s = summaries[tp]
+                row[f"tp{tp}"] = {
+                    "tokens_per_s": s["tokens_per_s"],
+                    "wall_s": s["wall_s"],
+                    "slot_occupancy": s["slot_occupancy"],
+                    "recall_bytes_sync": s["recall_bytes_sync"],
+                    "recall_bytes_async": s["recall_bytes_async"],
+                    "per_shard_transfer_bytes":
+                        s["tp"]["per_shard_transfer_bytes"],
+                }
+            tp_hi = tps[-1]
+            sync1 = summaries[tps[0]]["recall_bytes_sync"]
+            row["per_shard_sync_reduction"] = (
+                sync1 / max(row[f"tp{tp_hi}"]["per_shard_transfer_bytes"]
+                            ["sync"], 1e-9))
+            row["tp_overhead"] = (summaries[tp_hi]["wall_s"]
+                                  / max(summaries[tps[0]]["wall_s"], 1e-9))
+            metrics["configs"][name] = row
+            if not quiet:
+                print(f"  {name:24s} bit_identical={ident} "
+                      f"tp{tp_hi}_overhead={row['tp_overhead']:.2f}x "
+                      f"per_shard_sync_reduction="
+                      f"{row['per_shard_sync_reduction']:.2f}x")
+    metrics["bit_identical"] = bool(metrics["bit_identical"])
+    return metrics
+
+
+def main():
+    from _common import bench_json
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run — still writes BENCH_sharded.json")
+    ap.add_argument("--no-json", action="store_true")
+    args = ap.parse_args()
+    config = dict(SMOKE) if args.smoke else dict(FULL)
+    print(f"devices: {jax.devices()}")
+    res = run(**config)
+    status = "PASS" if res["bit_identical"] else "FAIL"
+    print(f"bit_identical across tp sweep: {res['bit_identical']} [{status}]")
+    if not args.no_json:
+        bench_json("sharded", config, res)
+    if not res["bit_identical"]:
+        sys.exit(1)
+    return res
+
+
+if __name__ == "__main__":
+    main()

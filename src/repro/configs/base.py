@@ -244,6 +244,17 @@ class FreeKVConfig:
     # tiny score all-gather re-ranks them globally — restores global top-k
     # whenever no shard holds more than os*k/mp of the true top-k.
     sharded_overselect: int = 1
+    # Tensor-parallel serving (ServeEngine(tp>1)): every retrieval-side state
+    # leaf (pool + quant scales, summaries, sink/window rings, selection
+    # buffers) is sharded per KV-head group over a 1-D ('model',) mesh and
+    # the whole retrieval step — selection, recall, overlap pipeline,
+    # correction, attention — runs shard-local inside one shard_map per
+    # attention layer. Backbone weights/activations stay replicated, so the
+    # only cross-shard transfer is the per-head-group attention output
+    # all-gather and greedy outputs are BIT-IDENTICAL to tp=1. Exact
+    # (per-head full top-k) selection — unlike the page-sharded approximate
+    # ``sharded_retrieval`` path, with which it is mutually exclusive.
+    tp_serving: bool = False
 
     @property
     def quant_bits(self) -> int:

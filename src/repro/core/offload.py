@@ -64,18 +64,33 @@ def host_sharding_for(leaf, mesh=None, spec=None):
     return jax.sharding.SingleDeviceSharding(dev, memory_kind=kind)
 
 
-def place_decode_state(state, fkv: FreeKVConfig, mesh=None, specs=None):
+def place_decode_state(state, fkv: FreeKVConfig, mesh=None, specs=None,
+                       cfg=None):
     """Move the pool leaves of a (possibly nested, layer-stacked) decode state
-    to pinned_host memory. No-op for offload != 'host' or unsupported hosts."""
+    to pinned_host memory. No-op for offload != 'host' or unsupported hosts.
+
+    Sharding-aware: with a ``mesh``, each pool leaf keeps its partitioning
+    while moving memory kinds — pass ``specs`` (a single PartitionSpec for
+    every pool leaf) or ``cfg`` (per-leaf specs derived from
+    ``sharding/rules.decode_state_spec``, e.g. KV-head-group sharding under
+    tensor-parallel serving, where each shard's pool slice is host-resident
+    on its own device)."""
     if fkv.offload != "host" or not _host_kind_available():
         return state
+
+    def _spec_for(path, leaf):
+        if specs is not None:
+            return specs
+        if mesh is not None and cfg is not None:
+            from repro.sharding import rules
+            return rules.decode_state_spec(cfg, mesh, rules._path_str(path),
+                                           leaf, fkv)
+        return None
 
     def move(path, leaf):
         key = str(getattr(path[-1], "key", path[-1]))
         if key in HOST_KEYS and hasattr(leaf, "shape"):
-            sh = None
-            if specs is not None:
-                sh = specs
+            sh = _spec_for(path, leaf)
             return jax.device_put(leaf, host_sharding_for(leaf, mesh, sh))
         return leaf
 

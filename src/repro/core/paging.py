@@ -19,7 +19,13 @@ are inferred from the state itself (presence/shape of ``pool_scale``), so
 every downstream consumer keeps its signature, and ``kv_quant="none"`` states
 carry no extra leaves and trace the exact same graph as before.
 
-All state is a flat dict of arrays so it scans over layers and shards under pjit.
+All state is a flat dict of arrays so it scans over layers and shards under
+pjit. Every leaf keeps the KV-head dim explicit (never folded into another
+axis), which is what lets tensor-parallel serving shard the whole dict per
+KV-head group (``sharding/rules.decode_state_spec``) and run every op here —
+ring append, page completion, quantize-at-offload, the pool scatter —
+shard-local inside the TP ``shard_map`` with bit-identical results
+(``core/sharded_retrieval.TPGroupShardedRetriever``).
 """
 from __future__ import annotations
 

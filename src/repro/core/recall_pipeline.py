@@ -174,9 +174,17 @@ class RecallFlightTracker:
     freed/refilled), in which case the in-flight pages were streamed for
     nothing. The continuous-batching scheduler feeds this tracker each step
     and invalidates on slot free; the dropped total surfaces in
-    ``EngineMetrics.summary()["recall_overlap"]``."""
+    ``EngineMetrics.summary()["recall_overlap"]``.
 
-    def __init__(self):
+    Under tensor-parallel serving (``shards > 1``) the fed counts are the
+    GLOBAL integer page counts (psum'ed across the KV-head-group shards by
+    the TP retriever wrapper); every page block belongs to exactly one KV
+    head, hence one shard, so each shard's own host link carries exactly
+    ``1/shards`` of every class — ``summary()["per_shard"]`` reports that
+    view."""
+
+    def __init__(self, shards: int = 1):
+        self.shards = max(shards, 1)
         self._in_flight: Dict[int, float] = {}
         self.dropped_pages = 0.0
         self.staged_pages = 0.0
@@ -207,4 +215,10 @@ class RecallFlightTracker:
             "reused_pages": self.reused_pages,
             "dropped_pages": self.dropped_pages,
             "hidden_fraction": self.staged_pages / moved if moved else 0.0,
+            "per_shard": {
+                "shards": self.shards,
+                "staged_pages": self.staged_pages / self.shards,
+                "topup_pages": self.topup_pages / self.shards,
+                "dropped_pages": self.dropped_pages / self.shards,
+            },
         }

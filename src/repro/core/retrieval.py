@@ -672,6 +672,14 @@ METHODS = ("freekv", "arkvale", "infinigen", "quest", "shadowkv", "raas",
 
 
 def make_retriever(cfg: ArchConfig, fkv: FreeKVConfig, mesh=None):
+    from repro.core.sharded_retrieval import (TPGroupShardedRetriever,
+                                              tp_serving_active)
+    if tp_serving_active(cfg, fkv, mesh):
+        # serving TP: the plain (mesh-free) retriever for the local KV-head
+        # group runs inside a per-layer shard_map — overlap pipeline, quant
+        # pool views and kernels all shard-local (core/sharded_retrieval)
+        return TPGroupShardedRetriever(
+            cfg, fkv, mesh, lambda c: make_retriever(c, fkv, mesh=None))
     m = fkv.method
     if m == "freekv":
         return FreeKVRetriever(cfg, fkv, speculative=True, mesh=mesh)

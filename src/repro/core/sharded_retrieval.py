@@ -1,4 +1,22 @@
-"""Sharded speculative retrieval (beyond-paper §Perf optimization).
+"""Sharded retrieval: two multi-device execution schemes for the FreeKV
+decode step.
+
+1. **KV-head-group tensor parallelism** (``TPGroupShardedRetriever``, used by
+   ``ServeEngine(tp>1)``): every retrieval-side state leaf is sharded over
+   the GQA KV-head dim on a 1-D ``('model',)`` mesh and the entire per-layer
+   retrieval step — append/offload, selection, recall (incl. the overlapped
+   double-buffer pipeline and the quantized pool view), correction,
+   attention — runs shard-local inside one ``shard_map``. Selection stays
+   the exact per-head top-k, the only cross-shard transfer is the tiny
+   per-head-group attention-output all-gather, and greedy outputs are
+   **bit-identical** to the unsharded path (``tests/test_sharded_serving``).
+
+2. **Page-sharded fused decode step** (``sharded_decode_step``, beyond-paper
+   §Perf optimization, ``fkv.sharded_retrieval``): described below —
+   approximate shard-local selection + LSE-merged partial attention for
+   meshes where the KV-head count cannot absorb the model axis
+   (long_500k-style sequence parallelism). The two schemes are mutually
+   exclusive per config.
 
 The paper's FreeKV runs selection globally, recalls selected pages to one
 device, and appends/offloads pages with batch-indexed scatters. Distributed
@@ -27,9 +45,11 @@ drop from 20.3 GB -> 0.45 GB per device (§Perf log in EXPERIMENTS.md).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.configs.base import ArchConfig, FreeKVConfig
@@ -37,6 +57,140 @@ from repro.core import selection
 from repro.models.layers import softcap as _softcap
 
 NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# KV-head-group tensor parallelism (serving TP)
+# ---------------------------------------------------------------------------
+def tp_group_size(mesh) -> int:
+    """Size of the 'model' axis, or 1 when the mesh has none."""
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return 1
+    return mesh.shape["model"]
+
+
+def tp_serving_active(cfg: ArchConfig, fkv: FreeKVConfig, mesh) -> bool:
+    """Should retrieval run as KV-head-group TP on this (cfg, fkv, mesh)?
+
+    Requires the head counts to divide the model axis (every shard owns an
+    integral group of KV heads and their G query heads); mutually exclusive
+    with the page-sharded fused step."""
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return False
+    mp = tp_group_size(mesh)
+    return (fkv.tp_serving and not fkv.sharded_retrieval
+            and cfg.n_kv_heads % mp == 0 and cfg.n_heads % mp == 0)
+
+
+def tp_state_specs(cfg: ArchConfig, mesh, state):
+    """PartitionSpec tree for one layer's retrieval state under serving TP —
+    the single source of truth is ``sharding/rules.decode_state_spec`` (its
+    KV-head branch), so the shard_map in_specs can never diverge from the
+    slot pool's storage shardings."""
+    from repro.sharding import rules
+
+    def f(path, leaf):
+        return rules.decode_state_spec(cfg, mesh, rules._path_str(path), leaf)
+
+    return jax.tree_util.tree_map_with_path(f, state)
+
+
+class TPGroupShardedRetriever:
+    """Wrap any pool-backed retriever in a per-layer shard_map over 'model'.
+
+    ``make_inner`` builds the wrapped retriever for a given ArchConfig; it is
+    called twice — once with a *local view* config (head counts divided by
+    the model-axis size) whose instance runs inside the shard body, and once
+    with the global config for state construction. Because every retrieval
+    op is per-KV-head (selection top-k, recall gather, correction masks, the
+    overlap executor's resident matching, quant dequant, attention softmax),
+    the local instance computes exactly the corresponding slice of the
+    global computation: outputs are bit-identical to the unwrapped
+    retriever, shard count notwithstanding.
+
+    Cross-shard traffic per decode step: one all-gather of the (B, H, d)
+    attention output (forced replicated so the following out-projection runs
+    as a full replicated matmul — a partial-contraction psum would break
+    bit-identity) plus integer psums of the transfer counters. Host->device
+    recall traffic is per-head-group: each shard only ever touches its own
+    slice of the (possibly host-resident, possibly quantized) pool.
+    """
+
+    def __init__(self, cfg: ArchConfig, fkv: FreeKVConfig, mesh, make_inner):
+        mp = tp_group_size(mesh)
+        assert cfg.n_kv_heads % mp == 0 and cfg.n_heads % mp == 0, (
+            f"{cfg.name}: the model axis ({mp}) must divide both head "
+            f"counts ({cfg.n_heads}/{cfg.n_kv_heads}) for KV-head-group TP")
+        self.cfg, self.fkv, self.mesh, self.mp = cfg, fkv, mesh, mp
+        self.local_cfg = dataclasses.replace(
+            cfg, n_heads=cfg.n_heads // mp, n_kv_heads=cfg.n_kv_heads // mp)
+        self.inner = make_inner(self.local_cfg)
+        self._global = make_inner(cfg)
+        self.offloaded = getattr(self._global, "offloaded", False)
+
+    # counters summed over (local) KV heads inside the shard body — psum'ed
+    # to their exact global integer values
+    _COUNTERS = ("sync_pages", "async_pages", "reused_pages")
+
+    def _hspec(self):
+        return P(None, "model", None)          # (B, H|kv, d) head-dim shard
+
+    def init_state(self, batch, max_len, dtype=jnp.bfloat16):
+        return self._global.init_state(batch, max_len, dtype)
+
+    def prefill(self, state, k, v, q_last):
+        sspec = tp_state_specs(self.cfg, self.mesh, state)
+        kv_spec = P(None, None, "model", None)            # (B, T, kv, d)
+
+        def body(st, k_l, v_l, q_l):
+            return self.inner.prefill(st, k_l, v_l, q_l)
+
+        return shard_map(
+            body, mesh=self.mesh,
+            in_specs=(sspec, kv_spec, kv_spec, self._hspec()),
+            out_specs=sspec, check_vma=False)(state, k, v, q_last)
+
+    def decode(self, state, q, k_new, v_new, q_proxy=None):
+        sspec = tp_state_specs(self.cfg, self.mesh, state)
+        hq = self._hspec()
+        kn_spec = P(None, "model", None)                   # (B, kv, d)
+        # q_proxy=None must stay None for the inner retriever (proxy_query
+        # methods fall back to q_sel=q on None); a placeholder array rides
+        # the shard_map signature but is never consumed in that case
+        has_proxy = q_proxy is not None
+        if not has_proxy:
+            q_proxy = q
+
+        def body(st, q_l, kn_l, vn_l, qp_l):
+            o, st2, info = self.inner.decode(
+                st, q_l, kn_l, vn_l, q_proxy=qp_l if has_proxy else None)
+            B = q_l.shape[0]
+            out_info = {"corrected": info["corrected"],
+                        "similarity": info["similarity"]}
+            for c in self._COUNTERS:
+                val = info.get(c, jnp.zeros((B,), jnp.int32))
+                out_info[c] = jax.lax.psum(val, "model")
+            return o, st2, out_info
+
+        info_spec = {"corrected": P(None, "model"),
+                     "similarity": P(None, "model"),
+                     **{c: P(None) for c in self._COUNTERS}}
+        o, st2, info = shard_map(
+            body, mesh=self.mesh,
+            in_specs=(sspec, hq, kn_spec, kn_spec, hq),
+            out_specs=(hq, sspec, info_spec),
+            check_vma=False)(state, q, k_new, v_new, q_proxy)
+        # replicate the per-head-group attention outputs — the ONLY
+        # cross-shard tensor transfer of the step. The explicit constraint
+        # makes the partitioner all-gather o and run the out-projection as a
+        # full replicated matmul; left to itself it may choose a
+        # partial-contraction + psum, whose float summation order differs
+        # from the single-device program.
+        o = jax.lax.with_sharding_constraint(
+            o, NamedSharding(self.mesh, P()))
+        info["granularity"] = ("token" if getattr(self.inner,
+                               "token_wise_recall", False) else "page")
+        return o, st2, info
 
 
 def _partial_attend(cfg, q, k_cat, v_cat, pos, cur_pos):

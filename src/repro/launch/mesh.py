@@ -17,3 +17,17 @@ def make_host_mesh(model_parallel: int = 1):
     n = len(jax.devices())
     assert n % model_parallel == 0
     return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+
+
+def make_tp_mesh(tp: int):
+    """1-D ('model',) mesh over the first ``tp`` local devices — the serving
+    engine's tensor-parallel mesh (KV-head-group sharding; see
+    ``core/sharded_retrieval.TPGroupShardedRetriever``). On CPU, force
+    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    before importing jax."""
+    n = len(jax.devices())
+    assert n >= tp, (f"tp={tp} needs {tp} devices, have {n} "
+                     "(set --xla_force_host_platform_device_count on CPU)")
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:tp]), ("model",))

@@ -6,7 +6,12 @@ synchronous reference; outputs are bit-identical either way).
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b-smoke \
         --method freekv --context 512 --new-tokens 16 --batch 2 \
-        --scheduler continuous --prefix-cache-tokens 4096
+        --scheduler continuous --prefix-cache-tokens 4096 --tp 2
+
+``--tp N`` serves tensor-parallel over a 1-D ('model',) mesh: the paged KV
+slot pool, host pool (+ quant scales), summaries and selection state shard
+per KV-head group, the whole retrieval step runs shard-local, and greedy
+outputs are bit-identical to ``--tp 1`` (docs/serving.md).
 
 Prints per-request completions plus ``EngineMetrics.summary()`` (tokens/s,
 slot occupancy, TTFT, hidden vs exposed recall transfer). See
@@ -14,6 +19,7 @@ slot occupancy, TTFT, hidden vs exposed recall transfer). See
 """
 import argparse
 import json
+import os
 
 import jax
 
@@ -51,7 +57,19 @@ def main():
                          "packed with fused dequant-on-recall")
     ap.add_argument("--quant-group-size", type=int, default=0,
                     help="channels per fp32 scale group (0 = per page half)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shards (KV-head-group sharding "
+                         "over a 1-D mesh; bit-identical greedy outputs vs "
+                         "--tp 1). On CPU, forces XLA host devices when "
+                         "needed — set --tp before other jax users import.")
     args = ap.parse_args()
+
+    if args.tp > 1 and "--xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        # must happen before jax initializes its backends
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.tp}")
 
     cfg = get_config(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -68,7 +86,8 @@ def main():
                       sampler=SamplerConfig(temperature=args.temperature),
                       scheduler=args.scheduler,
                       prefill_bucket=args.prefill_bucket,
-                      prefix_cache_tokens=args.prefix_cache_tokens)
+                      prefix_cache_tokens=args.prefix_cache_tokens,
+                      tp=args.tp)
     n_req = args.requests or args.batch
     stream = needle_stream(cfg.vocab_size, args.context, args.page_size)
     reqs = [Request(uid=i, tokens=next(stream).tokens,

@@ -96,15 +96,34 @@ def init_params(cfg: ArchConfig, key, dtype=jnp.float32):
 # retrievers per pattern position
 # ---------------------------------------------------------------------------
 def _retrievers(cfg: ArchConfig, fkv: FreeKVConfig, mesh=None):
+    from repro.core.sharded_retrieval import (TPGroupShardedRetriever,
+                                              tp_serving_active)
+    tp = tp_serving_active(cfg, fkv, mesh)
+
     def make(lk):
         mixer, _ = lk
         if mixer == ATTN:
-            return make_retriever(cfg, fkv, mesh=mesh)
+            return make_retriever(cfg, fkv, mesh=mesh)   # TP-aware factory
         if mixer == ATTN_LOCAL:
-            return StreamingRetriever(cfg, fkv, window=cfg.sliding_window,
-                                      n_sink=0)
+            def mk(c):
+                return StreamingRetriever(c, fkv, window=cfg.sliding_window,
+                                          n_sink=0)
+            if tp:                       # sliding windows shard per KV head too
+                return TPGroupShardedRetriever(cfg, fkv, mesh, mk)
+            return mk(cfg)
         return None
     return ([make(lk) for lk in cfg.prelude], [make(lk) for lk in cfg.pattern])
+
+
+def _compute_mesh(fkv: FreeKVConfig, mesh):
+    """The mesh the backbone compute (projections, FFN/MoE, norms, logits)
+    should see. Under KV-head-group serving TP the backbone is REPLICATED —
+    weights and activations identical on every shard; only the retrieval
+    state is sharded — so the weight-resharding / sequence-parallel
+    constraints are skipped: they would shard the weights and replace
+    replicated matmuls with partial-contraction psums, breaking tp-vs-1
+    bit-identity."""
+    return None if fkv.tp_serving else mesh
 
 
 # ---------------------------------------------------------------------------
@@ -129,6 +148,21 @@ def _apply_ffn(cfg, lk, p, x, mesh):
 
 
 ROW_PARALLEL_KEYS = ("down", "wo", "wd", "out_proj", "x_proj")
+
+
+# ``jax.lax.optimization_barrier`` has no differentiation rule on the
+# jax-0.4.x line (one landed upstream later). The barrier is semantically the
+# identity, so give it one: identity JVP (and therefore identity transpose),
+# keeping the primal barrier in the saved-activation path under remat while
+# letting gradients flow straight through.
+@jax.custom_jvp
+def _opt_barrier(x):
+    return jax.lax.optimization_barrier(x)
+
+
+@_opt_barrier.defjvp
+def _opt_barrier_jvp(primals, tangents):
+    return _opt_barrier(primals[0]), tangents[0]
 
 
 def _gather_for_compute(cfg, mesh, lp):
@@ -339,7 +373,7 @@ def forward_train(cfg: ArchConfig, params, batch, mesh=None, remat=True):
             bspec = ba if x.shape[0] % max(nb, 1) == 0 else None
             x = jax.lax.with_sharding_constraint(
                 x, NamedSharding(mesh, P(bspec, "model", None)))
-        return jax.lax.optimization_barrier(x)
+        return _opt_barrier(x)
 
     def scan_body(x, lps):
         return body(_shard_saved(x), lps)
@@ -463,6 +497,7 @@ def prefill(cfg: ArchConfig, fkv: FreeKVConfig, params, batch, max_len: int,
     enc_x = _encode(cfg, params, batch["frontend"]) if cfg.is_encoder_decoder \
         else None
     pre_r, pat_r = _retrievers(cfg, fkv, mesh)
+    cmesh = _compute_mesh(fkv, mesh)
 
     def _kv_of(lk, ex):
         return (ex["k"], ex["v"]) if lk[0] in (ATTN, ATTN_LOCAL) else None
@@ -470,7 +505,7 @@ def prefill(cfg: ArchConfig, fkv: FreeKVConfig, params, batch, max_len: int,
     pre_states, pre_kv = [], []
     for lp, lk, r in zip(params["prelude"], cfg.prelude, pre_r):
         enc = _enc_kv(cfg, lp, enc_x) if enc_x is not None else None
-        x, _, ex = _apply_layer_seq(cfg, lk, lp, x, positions, mesh, enc)
+        x, _, ex = _apply_layer_seq(cfg, lk, lp, x, positions, cmesh, enc)
         pre_states.append(
             _prefill_layer_state(cfg, fkv, lk, r, ex, max_len, state_dtype, enc))
         pre_kv.append(_kv_of(lk, ex))
@@ -480,7 +515,7 @@ def prefill(cfg: ArchConfig, fkv: FreeKVConfig, params, batch, max_len: int,
         for pos_i, lk in enumerate(cfg.pattern):
             lp = lps[pos_i]
             enc = _enc_kv(cfg, lp, enc_x) if enc_x is not None else None
-            x, _, ex = _apply_layer_seq(cfg, lk, lp, x, positions, mesh, enc)
+            x, _, ex = _apply_layer_seq(cfg, lk, lp, x, positions, cmesh, enc)
             sts.append(_prefill_layer_state(cfg, fkv, lk, pat_r[pos_i], ex,
                                             max_len, state_dtype, enc))
             kvs.append(_kv_of(lk, ex) if return_kv else None)
@@ -554,12 +589,13 @@ def prefill_extend(cfg: ArchConfig, fkv: FreeKVConfig, params, batch,
     q_pos = jnp.broadcast_to(jnp.arange(Tp, Tp + S)[None], (B, S))
     kv_pos = jnp.broadcast_to(jnp.arange(Tp + S)[None], (B, Tp + S))
     pre_r, pat_r = _retrievers(cfg, fkv, mesh)
+    cmesh = _compute_mesh(fkv, mesh)
 
     pre_states, pre_kv = [], []
     for lp, lk, r, pkv in zip(params["prelude"], cfg.prelude, pre_r,
                               prefix_kv["prelude"]):
         x, ex = _apply_layer_extend(cfg, lk, lp, x, q_pos, kv_pos,
-                                    pkv[0], pkv[1], mesh)
+                                    pkv[0], pkv[1], cmesh)
         st = r.init_state(B, max_len, state_dtype)
         pre_states.append(r.prefill(st, ex["k"], ex["v"], ex["q_last"]))
         pre_kv.append((ex["k_new"], ex["v_new"]))
@@ -569,7 +605,7 @@ def prefill_extend(cfg: ArchConfig, fkv: FreeKVConfig, params, batch,
         sts, kvs = [], []
         for pos_i, lk in enumerate(cfg.pattern):
             x, ex = _apply_layer_extend(cfg, lk, lps[pos_i], x, q_pos, kv_pos,
-                                        pkvs[pos_i][0], pkvs[pos_i][1], mesh)
+                                        pkvs[pos_i][0], pkvs[pos_i][1], cmesh)
             st = pat_r[pos_i].init_state(B, max_len, state_dtype)
             sts.append(pat_r[pos_i].prefill(st, ex["k"], ex["v"], ex["q_last"]))
             kvs.append((ex["k_new"], ex["v_new"]))
@@ -651,6 +687,7 @@ def serve_step(cfg: ArchConfig, fkv: FreeKVConfig, params, state, tokens,
     B = x.shape[0]
     pos = state["pos"]
     pre_r, pat_r = _retrievers(cfg, fkv, mesh)
+    cmesh = _compute_mesh(fkv, mesh)
     q_proxy = jnp.zeros((x.shape[0], cfg.n_heads, cfg.d_head), x.dtype)
 
     stats_acc = _info_stats(None, B)
@@ -658,7 +695,7 @@ def serve_step(cfg: ArchConfig, fkv: FreeKVConfig, params, state, tokens,
     for lp, lk, r, st in zip(params["prelude"], cfg.prelude, pre_r,
                              state["prelude"]):
         x, st, q_proxy, info = _apply_layer_decode(
-            cfg, fkv, lk, r, lp, x, pos, st, mesh, q_proxy)
+            cfg, fkv, lk, r, lp, x, pos, st, cmesh, q_proxy)
         new_pre.append(st)
         s = _info_stats(info if lk[0] == ATTN else None, B)
         stats_acc = {k: stats_acc[k] + s[k] for k in stats_acc}
@@ -678,7 +715,7 @@ def serve_step(cfg: ArchConfig, fkv: FreeKVConfig, params, state, tokens,
                 states[pos_i])
             x, st, q_proxy, info = _apply_layer_decode(
                 cfg, fkv, lk, pat_r[pos_i], lps[pos_i], x, pos, st_i,
-                mesh, q_proxy)
+                cmesh, q_proxy)
             new_states.append(jax.tree.map(
                 lambda a, n: jax.lax.dynamic_update_index_in_dim(
                     a, n.astype(a.dtype), i, 0), states[pos_i], st))

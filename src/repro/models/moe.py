@@ -157,16 +157,34 @@ def apply_moe(cfg: ArchConfig, params, x, mesh=None, data_axes=None,
     return y, aux.reshape(B, T)
 
 
+def capacity_keep_mask(topk_idx, n_experts: int, capacity: int):
+    """Which (token, k) routing assignments survive the capacity cut.
+
+    Mirrors ``_dispatch_local``'s arrival order exactly: assignments are
+    ranked per expert by flat (token, k) index (the stable sort key), and
+    ranks >= capacity are dropped. Returns (N, k) bool."""
+    N, k = topk_idx.shape
+    flat_e = topk_idx.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)
+    arrival = jnp.cumsum(onehot, axis=0) - onehot          # exclusive rank
+    slot = jnp.take_along_axis(arrival, flat_e[:, None], axis=1)[:, 0]
+    return (slot < capacity).reshape(N, k)
+
+
 def moe_dense_reference(cfg: ArchConfig, params, x):
-    """O(E) dense oracle: every expert computes every token (tests only)."""
+    """O(E) dense oracle: every expert computes every token (tests only).
+
+    Capacity-aware: assignments ``_dispatch_local`` would drop (per-expert
+    arrival rank >= capacity) contribute zero here too, so the oracle matches
+    the sort-based dispatch exactly — including under imbalanced routing."""
     B, T, d = x.shape
     xf = x.reshape(B * T, d)
     gates, topk_idx, topk_w = _route(cfg, params["router"], xf)
-    full_w = jnp.zeros_like(gates)
-    full_w = jnp.take_along_axis(
-        full_w, topk_idx, axis=1).astype(jnp.float32)  # placeholder for shape
+    cap = _capacity(B * T, cfg.n_experts, cfg.moe_top_k)
+    keep = capacity_keep_mask(topk_idx, cfg.n_experts, cap)
     full_w = jnp.zeros_like(gates).at[
-        jnp.arange(xf.shape[0])[:, None], topk_idx].set(topk_w)
+        jnp.arange(xf.shape[0])[:, None], topk_idx].set(
+        jnp.where(keep, topk_w, 0.0))
     outs = _expert_ffn(cfg, params["wg"], params["wu"], params["wd"],
                        jnp.broadcast_to(xf, (cfg.n_experts,) + xf.shape))
     y = jnp.einsum("ne,end->nd", full_w, outs.astype(jnp.float32))

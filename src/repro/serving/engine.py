@@ -31,6 +31,7 @@ multiple — the extension path never pads — but note each distinct
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 from typing import List, Optional
@@ -78,8 +79,27 @@ class ServeEngine:
                  scheduler: str = "continuous",
                  prefill_bucket: int = 1,
                  prefix_cache_tokens: int = 0,
-                 pad_token: int = 0):
+                 pad_token: int = 0,
+                 tp: int = 1):
         assert scheduler in ("continuous", "static"), scheduler
+        if tp > 1:
+            # tensor-parallel serving: KV-head-group sharding over a 1-D
+            # ('model',) mesh. Every retrieval-side state leaf (pool + quant
+            # scales, summaries, rings, selection buffers) is sharded per
+            # KV-head group and the per-layer retrieval step runs inside a
+            # shard_map; backbone compute stays replicated, so greedy
+            # outputs are bit-identical to tp=1 (docs/serving.md).
+            assert mesh is None, "pass either mesh= or tp=, not both"
+            assert not fkv.sharded_retrieval, \
+                "tp serving and the page-sharded fused step are exclusive"
+            assert cfg.n_kv_heads % tp == 0 and cfg.n_heads % tp == 0, (
+                f"{cfg.name}: tp={tp} must divide both n_heads="
+                f"{cfg.n_heads} and n_kv_heads={cfg.n_kv_heads}")
+            from repro.launch.mesh import make_tp_mesh
+            mesh = make_tp_mesh(tp)
+            fkv = dataclasses.replace(fkv, tp_serving=True)
+        self.tp = tp
+        self.mesh = mesh
         self.cfg, self.fkv, self.params = cfg, fkv, params
         self.max_len, self.batch_size = max_len, batch_size
         self.sampler = sampler
@@ -110,8 +130,9 @@ class ServeEngine:
         self.last_metrics: Optional[EngineMetrics] = None
         # per-slot in-flight staged recall accounting (core/recall_pipeline);
         # the continuous scheduler feeds it each step and invalidates on
-        # slot turnover. Reset per generate() run.
-        self.recall_tracker = RecallFlightTracker()
+        # slot turnover. Reset per generate() run. Under TP it is fed global
+        # (psum'ed) counts and carries the per-shard view.
+        self.recall_tracker = RecallFlightTracker(shards=self.tp)
 
     # ------------------------------------------------------------------
     # scheduler backend protocol
@@ -142,7 +163,8 @@ class ServeEngine:
 
     def make_slot_pool(self, num_slots: int) -> SlotPool:
         return SlotPool(self.cfg, self.fkv, num_slots, self.max_len,
-                        self.state_dtype)
+                        self.state_dtype,
+                        mesh=self.mesh if self.tp > 1 else None)
 
     def step(self, state, tokens):
         return self._step(self.params, state, jnp.asarray(tokens))
@@ -238,7 +260,8 @@ class ServeEngine:
         for i in range(0, len(requests), self.batch_size):
             out.extend(self._generate_batch(requests[i: i + self.batch_size],
                                             seed + i))
-        em = EngineMetrics(num_slots=self.batch_size, scheduler="static")
+        em = EngineMetrics(num_slots=self.batch_size, scheduler="static",
+                           tp=self.tp)
         from repro.core.offload import host_offload_active
         em.transfer_is_dma = host_offload_active(self.fkv)
         em.page_block_bytes = self.page_block_bytes
@@ -258,7 +281,7 @@ class ServeEngine:
             self._pool = self.make_slot_pool(self.batch_size)
         else:
             self._pool.reset_all()
-        self.recall_tracker = RecallFlightTracker()
+        self.recall_tracker = RecallFlightTracker(shards=self.tp)
         sched = ContinuousScheduler(self, self._pool)
         tracked, em = sched.run(requests, seed)
         from repro.core.offload import pool_on_host

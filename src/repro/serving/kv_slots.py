@@ -55,26 +55,51 @@ def _extract(state, slot):
 
 
 class SlotPool:
-    """Fixed-capacity pool of physical batch slots over one decode state."""
+    """Fixed-capacity pool of physical batch slots over one decode state.
+
+    With a ``mesh`` (tensor-parallel serving), every state leaf is stored
+    under the sharding ``sharding/rules.decode_state_shardings`` assigns —
+    KV-head dim over 'model' for pools/summaries/rings/selection buffers —
+    so the shard_map'ped decode step consumes its inputs without any
+    resharding, and per-slot splices stay slot-local per shard. The host
+    pool leaves (+ quant scales) additionally move to host memory when
+    ``fkv.offload == 'host'`` (``core/offload.place_decode_state``)."""
 
     def __init__(self, cfg, fkv, num_slots: int, max_len: int,
-                 state_dtype=jnp.float32):
+                 state_dtype=jnp.float32, mesh=None):
         self.cfg, self.fkv = cfg, fkv
         self.num_slots = num_slots
         self.max_len = max_len
         self.state_dtype = state_dtype
-        self._init_full = jax.jit(
-            lambda: init_decode_state(cfg, fkv, num_slots, max_len,
-                                      state_dtype))
-        self._template = jax.jit(
-            lambda: init_decode_state(cfg, fkv, 1, max_len, state_dtype))()
+        self.mesh = mesh
+
+        def _mk_init(batch):
+            fn = lambda: init_decode_state(cfg, fkv, batch, max_len,  # noqa: E731
+                                           state_dtype)
+            if mesh is None:
+                return jax.jit(fn)
+            from repro.sharding.rules import decode_state_shardings
+            shardings = decode_state_shardings(cfg, mesh, jax.eval_shape(fn))
+            return jax.jit(fn, out_shardings=shardings)
+
+        self._init_full = _mk_init(num_slots)
+        self._template = self._place(_mk_init(1)())
         self._splice = jax.jit(_splice)
         self._extract = jax.jit(_extract)
-        self.state = self._init_full()
+        self.state = self._place(self._init_full())
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
         self._dirty: Set[int] = set()
         self.owner: List[Optional[int]] = [None] * num_slots
         self.allocs = 0
+
+    def _place(self, state):
+        """Move pool leaves (+ quant scales) to host memory under
+        ``fkv.offload == 'host'`` — sharding-preserving under a mesh (each
+        shard's KV-head-group slice is host-resident on its own device).
+        No-op otherwise."""
+        from repro.core.offload import place_decode_state
+        return place_decode_state(state, self.fkv, mesh=self.mesh,
+                                  cfg=self.cfg)
 
     # -- bookkeeping ---------------------------------------------------
     @property
@@ -131,7 +156,7 @@ class SlotPool:
         return self._extract(self.state, jnp.int32(slot))
 
     def reset_all(self):
-        self.state = self._init_full()
+        self.state = self._place(self._init_full())
         self._free = list(range(self.num_slots - 1, -1, -1))
         self._dirty = set()
         self.owner = [None] * self.num_slots

@@ -85,6 +85,10 @@ class EngineMetrics:
     transfer_is_dma: bool = False
     prefix_cache: Dict = field(default_factory=dict)
     scheduler: str = "continuous"
+    # tensor-parallel serving: page counts above are GLOBAL (psum'ed across
+    # the KV-head-group shards); each shard moves 1/tp of them over its own
+    # host link — see summary()["tp"] for the per-shard view
+    tp: int = 1
 
     def record_step(self, n_active: int):
         self.steps += 1
@@ -146,6 +150,17 @@ class EngineMetrics:
                 / DEQUANT_ELEMS_PER_S)
 
     @property
+    def per_shard_transfer_bytes(self) -> Dict[str, float]:
+        """Host->device bytes each tensor-parallel shard moves over its own
+        link. Page counts are global; the KV-head-group sharding splits
+        every transfer class evenly across the tp shards (each page block
+        belongs to exactly one KV head, hence one shard)."""
+        tp = max(self.tp, 1)
+        return {"sync": self.exposed_transfer_bytes / tp,
+                "async": self.hidden_transfer_bytes / tp,
+                "dropped": self.dropped_pages * self.page_block_bytes / tp}
+
+    @property
     def hidden_fraction(self) -> float:
         """Fraction of transferred recall bytes hidden behind compute.
 
@@ -181,6 +196,10 @@ class EngineMetrics:
                 "dropped_in_flight_bytes":
                     self.dropped_pages * self.page_block_bytes,
                 "transfer_is_dma": self.transfer_is_dma,
+            },
+            "tp": {
+                "tp": self.tp,
+                "per_shard_transfer_bytes": self.per_shard_transfer_bytes,
             },
             "kv_quant": {
                 "mode": self.kv_quant,

@@ -88,7 +88,8 @@ class ContinuousScheduler:
             queue.append(_Tracked(req=r, order=i, metrics=rm))
 
         em = EngineMetrics(num_slots=pool.num_slots, scheduler="continuous",
-                           page_block_bytes=backend.page_block_bytes)
+                           page_block_bytes=backend.page_block_bytes,
+                           tp=getattr(backend, "tp", 1))
         # per-slot in-flight staged recall: the double buffer a slot carries
         # out of step t is consumed by step t+1 unless the slot turns over
         flight = getattr(backend, "recall_tracker", None) \

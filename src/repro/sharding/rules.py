@@ -9,6 +9,13 @@ Storage strategy (see DESIGN.md §5):
     else the *page* dim over "model"; with global batch 1 (long_500k) the page
     dim absorbs all axes (sequence-parallel retrieval).
   * replicate anything indivisible — correctness first, the §Perf loop tunes.
+
+``decode_state_spec``'s KV-head branch is also the single source of truth
+for tensor-parallel serving (``ServeEngine(tp>1)``, 1-D ('model',) mesh with
+no data axes): the slot pool stores under these shardings
+(``serving/kv_slots``) and the per-layer TP shard_map derives its
+in/out_specs from the same function (``core/sharded_retrieval
+.tp_state_specs``), so storage and compute partitioning cannot diverge.
 """
 from __future__ import annotations
 

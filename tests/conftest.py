@@ -11,6 +11,36 @@ import pytest
 from repro.configs import get_config
 from repro.configs.base import FreeKVConfig
 
+# Modules kept whole on one shard: their session-scoped fixture (a multi-
+# device subprocess driver) would otherwise re-run once per shard.
+_ATOMIC_MODULES = {"test_sharded_serving.py"}
+
+
+def pytest_collection_modifyitems(config, items):
+    """Deterministic test sharding for the CI matrix — no plugin needed.
+
+    ``PYTEST_SHARD_COUNT=N PYTEST_SHARD_ID=i`` keeps every N-th collected
+    item (round-robin, so heavy parametrized groups spread evenly), except
+    for _ATOMIC_MODULES which are pinned to one shard by a stable name hash.
+    Unset / count<=1 runs everything (local default)."""
+    count = int(os.environ.get("PYTEST_SHARD_COUNT", "0") or 0)
+    if count <= 1:
+        return
+    shard = int(os.environ.get("PYTEST_SHARD_ID", "0")) % count
+    keep, drop = [], []
+    idx = 0
+    for item in items:
+        fname = os.path.basename(str(item.fspath))
+        if fname in _ATOMIC_MODULES:
+            key = sum(ord(c) for c in fname)      # stable across machines
+        else:
+            key = idx
+            idx += 1
+        (keep if key % count == shard else drop).append(item)
+    if drop:
+        config.hook.pytest_deselected(items=drop)
+        items[:] = keep
+
 
 @pytest.fixture(scope="session")
 def small_fkv():

@@ -1,0 +1,320 @@
+"""Tensor-parallel serving (ServeEngine(tp=2), KV-head-group sharding).
+
+Multi-device coverage runs in ONE subprocess with two forced XLA host
+devices (``--xla_force_host_platform_device_count`` must be set before jax
+initializes, so it cannot run in the main pytest process); the driver at the
+bottom of this file executes every scenario and writes a JSON report that a
+session-scoped fixture loads once. Assertions:
+
+  * tp=2 greedy outputs are BIT-IDENTICAL to tp=1 on mixed-length
+    continuous-batching traffic — recall_overlap on and off, kv_quant none
+    and int8 — and the global transfer counters match exactly;
+  * the radix-trie prefix cache works under TP (hits on shared prefixes,
+    outputs still bit-identical to tp=1 with the same cache config);
+  * RecallFlightTracker accounting holds per shard: each shard moves 1/tp of
+    every transfer class, including staged buffers dropped at slot turnover;
+  * the quantized int8 pool round-trips bit-exactly through the per-shard
+    recall (TP wrapper vs the plain single-device dequant gather).
+
+The mp=1 wrapper-identity tests run in-process on the default single device:
+a 1-shard mesh must be semantically invisible.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import FreeKVConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# in-process: 1-shard TP wrapper is exactly the plain retriever
+# ---------------------------------------------------------------------------
+def _mp1_mesh():
+    from repro.launch.mesh import make_tp_mesh
+    return make_tp_mesh(1)
+
+
+@pytest.mark.parametrize("kv_quant", ["none", "int8"])
+def test_tp_wrapper_mp1_bit_identical(kv_quant):
+    from repro.core.retrieval import make_retriever
+    from repro.core.sharded_retrieval import TPGroupShardedRetriever
+    cfg = get_config("granite-3-8b-smoke")
+    fkv = FreeKVConfig(method="freekv", page_size=8, budget=48, n_sink=8,
+                       n_window=8, tau=0.8, kv_quant=kv_quant)
+    mesh = _mp1_mesh()
+    r_tp = make_retriever(cfg, dataclasses.replace(fkv, tp_serving=True),
+                          mesh=mesh)
+    assert isinstance(r_tp, TPGroupShardedRetriever)
+    r_pl = make_retriever(cfg, fkv)
+
+    B, T, H, kv, d = 2, 64, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.normal(key, (B, T, kv, d), jnp.float32)
+    vs = jax.random.normal(jax.random.fold_in(key, 1), (B, T, kv, d),
+                           jnp.float32)
+    q0 = jax.random.normal(jax.random.fold_in(key, 2), (B, H, d))
+    st_tp = r_tp.prefill(r_tp.init_state(B, T + 32, jnp.float32), ks, vs, q0)
+    st_pl = r_pl.prefill(r_pl.init_state(B, T + 32, jnp.float32), ks, vs, q0)
+    def _jit_decode(r):
+        def f(s, q, kn, vn):
+            o, st, info = r.decode(s, q, kn, vn)
+            # info carries a static "granularity" string; keep array leaves
+            return o, st, {k: v for k, v in info.items()
+                           if not isinstance(v, str)}
+        return jax.jit(f)
+
+    dec_tp = _jit_decode(r_tp)
+    dec_pl = _jit_decode(r_pl)
+    for t in range(10):                     # crosses a page-offload boundary
+        kq = jax.random.fold_in(key, 100 + t)
+        q = jax.random.normal(kq, (B, H, d))
+        kn = jax.random.normal(jax.random.fold_in(kq, 1), (B, kv, d))
+        vn = jax.random.normal(jax.random.fold_in(kq, 2), (B, kv, d))
+        o_tp, st_tp, i_tp = dec_tp(st_tp, q, kn, vn)
+        o_pl, st_pl, i_pl = dec_pl(st_pl, q, kn, vn)
+        np.testing.assert_array_equal(np.asarray(o_tp), np.asarray(o_pl))
+        np.testing.assert_array_equal(np.asarray(st_tp["sel_idx"]),
+                                      np.asarray(st_pl["sel_idx"]))
+        np.testing.assert_array_equal(np.asarray(i_tp["sync_pages"]),
+                                      np.asarray(i_pl["sync_pages"]))
+    np.testing.assert_array_equal(np.asarray(st_tp["pool"]),
+                                  np.asarray(st_pl["pool"]))
+
+
+def test_tp_state_specs_shard_kv_dims():
+    """Every KV-headed leaf gets 'model' on its KV-head (or q-head) axis;
+    replicated leaves (positions, lengths) get none."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core import paging
+    from repro.core.sharded_retrieval import tp_state_specs
+    cfg = get_config("granite-3-8b-smoke")
+    fkv = FreeKVConfig(method="freekv", page_size=8, budget=48, n_sink=8,
+                       n_window=8, kv_quant="int8")
+    mesh = _mp1_mesh()
+    st = jax.eval_shape(
+        lambda: paging.init_kv_state(cfg, fkv, 2, 96, jnp.float32))
+    specs = tp_state_specs(cfg, mesh, st)
+    assert specs["pool"] == P(None, None, "model", None, None, None)
+    assert specs["pool_scale"] == P(None, None, "model", None, None)
+    assert specs["summ"] == P(None, None, "model", None, None)
+    assert specs["sel_k"] == P(None, "model", None, None, None)
+    assert specs["sel_idx"] == P(None, "model", None)
+    assert specs["win_k"] == P(None, None, "model", None)
+    assert specs["qprev"] == P(None, "model", None)
+    assert specs["win_pos"] == P(None, None)
+    assert specs["length"] == P(None)
+
+
+def test_engine_rejects_bad_tp():
+    from repro.models.model import init_params
+    from repro.serving.engine import ServeEngine
+    cfg = get_config("granite-3-8b-smoke")     # n_kv_heads=2
+    fkv = FreeKVConfig(method="freekv", page_size=8, budget=48, n_sink=8,
+                       n_window=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(AssertionError):
+        ServeEngine(cfg, fkv, params, max_len=96, batch_size=1, tp=3)
+    with pytest.raises(AssertionError):
+        ServeEngine(cfg, dataclasses.replace(fkv, sharded_retrieval=True),
+                    params, max_len=96, batch_size=1, tp=2)
+
+
+# ---------------------------------------------------------------------------
+# multi-device scenarios: one subprocess, many assertions
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="session")
+def tp_report(tmp_path_factory):
+    out = tmp_path_factory.mktemp("tp_serving") / "report.json"
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    subprocess.run([sys.executable, os.path.abspath(__file__), str(out)],
+                   check=True, timeout=1500, env=env, cwd=REPO)
+    return json.loads(out.read_text())
+
+
+@pytest.mark.parametrize("overlap", [True, False], ids=["overlap", "sync"])
+@pytest.mark.parametrize("quant", ["none", "int8"])
+def test_tp2_bit_identical_mixed_traffic(tp_report, overlap, quant):
+    r = tp_report[f"traffic/overlap={overlap}/quant={quant}"]
+    assert r["tp1_tokens"] == r["tp2_tokens"], \
+        "tp=2 greedy outputs diverged from tp=1"
+    # global transfer counters are exact integers -> must match across tp
+    for k in ("recall_bytes_sync", "recall_bytes_async"):
+        assert r["tp1_summary"][k] == r["tp2_summary"][k], k
+    assert r["tp2_summary"]["tp"]["tp"] == 2
+
+
+@pytest.mark.parametrize("quant", ["none", "int8"])
+def test_tp2_per_shard_flight_accounting(tp_report, quant):
+    """Each shard owns exactly 1/tp of every transfer class — hidden,
+    exposed, and staged buffers dropped in flight at slot turnover."""
+    r = tp_report[f"traffic/overlap=True/quant={quant}"]
+    s2 = r["tp2_summary"]
+    per = s2["tp"]["per_shard_transfer_bytes"]
+    ro = s2["recall_overlap"]
+    assert per["sync"] * 2 == pytest.approx(ro["exposed_bytes"])
+    assert per["async"] * 2 == pytest.approx(ro["hidden_bytes"])
+    assert per["dropped"] * 2 == pytest.approx(ro["dropped_in_flight_bytes"])
+    # dropped-in-flight accounting itself is tp-invariant
+    s1 = r["tp1_summary"]
+    assert s1["recall_overlap"]["dropped_in_flight_bytes"] == \
+        pytest.approx(ro["dropped_in_flight_bytes"])
+
+
+def test_tp2_prefix_cache_hits(tp_report):
+    r = tp_report["prefix_cache"]
+    assert r["tp1_tokens"] == r["tp2_tokens"], \
+        "prefix-cached tp=2 outputs diverged from tp=1"
+    assert r["tp2_hit_tokens"] > 0, "no prefix-cache hits under TP"
+    assert r["tp2_hit_tokens"] == r["tp1_hit_tokens"]
+    # cached engine agrees with the cold engine of the same tp
+    assert r["tp2_tokens"] == r["tp2_cold_tokens"]
+
+
+def test_tp2_quant_pool_roundtrip(tp_report):
+    """int8 pool content recalled per shard is bit-equal to the plain
+    single-device dequant gather, and within quantization error of fp."""
+    r = tp_report["quant_roundtrip"]
+    assert r["bit_equal_vs_plain"] is True
+    assert 0.0 < r["max_abs_err_vs_fp"] < 0.1
+    assert r["sel_idx_equal"] is True
+
+
+def test_tp2_static_scheduler_bit_identical(tp_report):
+    r = tp_report["static"]
+    assert r["tp1_tokens"] == r["tp2_tokens"]
+
+
+# ---------------------------------------------------------------------------
+# subprocess driver (2 forced host devices)
+# ---------------------------------------------------------------------------
+def _mixed_requests(cfg, rng, n=6):
+    from repro.serving.engine import Request
+    lens = [40, 72, 56, 88, 48, 64][:n]
+    return [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        size=L).astype(np.int32),
+                    max_new_tokens=5 + (i % 3))
+            for i, L in enumerate(lens)]
+
+
+def _summary(eng):
+    return eng.last_metrics.summary()
+
+
+def _driver(out_path):
+    from repro.models.model import init_params
+    from repro.serving.engine import Request, ServeEngine
+    assert len(jax.devices()) >= 2, jax.devices()
+    cfg = get_config("granite-3-8b-smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = _mixed_requests(cfg, rng)
+    report = {}
+
+    def engine(tp, overlap=True, quant="none", scheduler="continuous",
+               prefix_cache_tokens=0):
+        fkv = FreeKVConfig(method="freekv", page_size=8, budget=48, n_sink=8,
+                           n_window=8, tau=0.8, recall_overlap=overlap,
+                           kv_quant=quant)
+        return ServeEngine(cfg, fkv, params, max_len=160, batch_size=3,
+                           prefill_bucket=24, scheduler=scheduler,
+                           prefix_cache_tokens=prefix_cache_tokens, tp=tp)
+
+    def gen(eng, rs=reqs):
+        outs = eng.generate([Request(uid=r.uid, tokens=r.tokens,
+                                     max_new_tokens=r.max_new_tokens)
+                             for r in rs])
+        return [c.tokens for c in outs]
+
+    # -- mixed-length continuous traffic, 4 configs x {tp1, tp2} ----------
+    for overlap in (True, False):
+        for quant in ("none", "int8"):
+            e1 = engine(1, overlap, quant)
+            t1 = gen(e1)
+            e2 = engine(2, overlap, quant)
+            t2 = gen(e2)
+            report[f"traffic/overlap={overlap}/quant={quant}"] = {
+                "tp1_tokens": t1, "tp2_tokens": t2,
+                "tp1_summary": _summary(e1), "tp2_summary": _summary(e2)}
+
+    # -- static chunked scheduler under TP --------------------------------
+    e1 = engine(1, scheduler="static")
+    t1 = gen(e1)
+    e2 = engine(2, scheduler="static")
+    t2 = gen(e2)
+    report["static"] = {"tp1_tokens": t1, "tp2_tokens": t2}
+
+    # -- prefix cache: two waves sharing a 48-token prefix ----------------
+    shared = rng.integers(0, cfg.vocab_size, size=48).astype(np.int32)
+    waves = []
+    for i in range(4):
+        suffix = rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
+        waves.append(Request(uid=100 + i,
+                             tokens=np.concatenate([shared, suffix]),
+                             max_new_tokens=5))
+    pc = {}
+    for tp in (1, 2):
+        e = engine(tp, prefix_cache_tokens=4096)
+        toks = gen(e, waves)
+        s = _summary(e)
+        pc[f"tp{tp}_tokens"] = toks
+        pc[f"tp{tp}_hit_tokens"] = sum(
+            m.prefix_hit_tokens for m in e.last_metrics.requests)
+        pc[f"tp{tp}_summary"] = s
+        ec = engine(tp)                       # no cache: reference outputs
+        pc[f"tp{tp}_cold_tokens"] = gen(ec, waves)
+    report["prefix_cache"] = pc
+
+    # -- quantized pool round-trip through per-shard recall ---------------
+    from repro.core.retrieval import make_retriever
+    from repro.launch.mesh import make_tp_mesh
+    mesh = make_tp_mesh(2)
+    base = dict(method="freekv", page_size=8, budget=48, n_sink=8,
+                n_window=8, tau=0.8)
+    B, T, H, kv, d = 2, 64, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.normal(key, (B, T, kv, d), jnp.float32)
+    vs = jax.random.normal(jax.random.fold_in(key, 1), (B, T, kv, d),
+                           jnp.float32)
+    q0 = jax.random.normal(jax.random.fold_in(key, 2), (B, H, d))
+    sel = {}
+    for name, quant, m in (("tp_int8", "int8", mesh),
+                           ("plain_int8", "int8", None),
+                           ("plain_fp", "none", None)):
+        fkv = FreeKVConfig(**base, kv_quant=quant,
+                           tp_serving=m is not None)
+        r = make_retriever(cfg, fkv, mesh=m)
+        st = r.prefill(r.init_state(B, T + 32, jnp.float32), ks, vs, q0)
+        sel[name] = (np.asarray(st["sel_k"]), np.asarray(st["sel_v"]),
+                     np.asarray(st["sel_idx"]))
+    bit_equal = (np.array_equal(sel["tp_int8"][0], sel["plain_int8"][0])
+                 and np.array_equal(sel["tp_int8"][1], sel["plain_int8"][1]))
+    idx_equal = np.array_equal(sel["tp_int8"][2], sel["plain_fp"][2])
+    err = float(np.max(np.abs(sel["tp_int8"][0] - sel["plain_fp"][0])))
+    report["quant_roundtrip"] = {"bit_equal_vs_plain": bool(bit_equal),
+                                 "sel_idx_equal": bool(idx_equal),
+                                 "max_abs_err_vs_fp": err}
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, default=str)
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    _driver(sys.argv[1])

@@ -1,0 +1,196 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate over the committed BENCH_*.json trajectory files.
+
+For every gated section this script
+
+  1. loads the committed ``BENCH_<section>.json`` at the repo root (the
+     baseline — written by the benchmark's ``--smoke`` / run.py config and
+     committed with the PR that changed the numbers),
+  2. re-runs the benchmark command that produces that file (same config, so
+     the comparison is apples-to-apples),
+  3. compares the re-run metrics against the baseline and **fails on a
+     regression beyond the tolerance** (default 25%).
+
+Only machine-independent metrics are gated — accuracies, byte counts,
+analytical cost-model latencies, bit-identity flags, within-run ratios.
+Raw wall-clock (``us_per_step`` etc.) is recorded in the files but never
+gated: CI runners differ in speed, the committed numbers don't.
+
+A metric whose baseline is 0 on a percent-scaled axis (e.g. ``acc_drop``)
+is gated absolutely: the new value may not exceed the tolerance itself.
+
+    PYTHONPATH=src python tools/check_bench.py [--tolerance 0.25]
+        [--sections breakdown ablation quant_quality sharded] [--list]
+
+Exit status 0 = no regressions; 1 = regression or missing/failed re-run.
+Sections without a committed baseline are skipped with a warning
+(bootstrap: the first commit of a new BENCH file establishes the baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# benchmark commands, deduplicated across sections before running
+COMMANDS = {
+    "costmodel": [sys.executable, "benchmarks/run.py", "--only", "breakdown",
+                  "ablation", "quant"],
+    "sharded": [sys.executable, "benchmarks/sharded_throughput.py",
+                "--smoke"],
+}
+
+# (path-into-metrics, direction); direction: "lower" | "higher" | "true"
+GATES = {
+    "breakdown": {
+        "cmd": "costmodel",
+        "metrics": [
+            (("llama31-8b", "freekv", "total_s"), "lower"),
+            (("llama31-8b", "arkvale", "total_s"), "lower"),
+            (("llama31-8b", "freekv", "recall_blocking_s"), "lower"),
+            (("qwen25-7b", "freekv", "total_s"), "lower"),
+        ],
+    },
+    "ablation": {
+        "cmd": "costmodel",
+        "metrics": [
+            (("+HL+DB+SR(FreeKV)",), "lower"),
+            (("+HL+DB",), "lower"),
+            (("baseline(NHD,blocking)",), "lower"),
+        ],
+    },
+    "quant_quality": {
+        "cmd": "costmodel",
+        "metrics": [
+            (("none", "needle_acc"), "higher"),
+            (("int8", "needle_acc"), "higher"),
+            (("int8", "bytes_per_step"), "lower"),
+            (("int4", "bytes_per_step"), "lower"),
+            (("ratios", "int8_bytes_reduction"), "higher"),
+            (("ratios", "int8_acc_drop"), "lower"),
+            (("ratios", "int4_acc_drop"), "lower"),
+        ],
+    },
+    "sharded": {
+        "cmd": "sharded",
+        "metrics": [
+            (("bit_identical",), "true"),
+            (("configs", "overlap=1/quant=none", "bit_identical"), "true"),
+            (("configs", "overlap=1/quant=int8", "bit_identical"), "true"),
+            (("configs", "overlap=1/quant=none",
+              "per_shard_sync_reduction"), "higher"),
+            (("configs", "overlap=1/quant=int8",
+              "per_shard_sync_reduction"), "higher"),
+        ],
+    },
+}
+
+
+def bench_path(section: str) -> str:
+    return os.path.join(ROOT, f"BENCH_{section}.json")
+
+
+def load_metrics(section: str):
+    path = bench_path(section)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f).get("metrics")
+
+
+def dig(tree, path):
+    for k in path:
+        if not isinstance(tree, dict) or k not in tree:
+            return None
+        tree = tree[k]
+    return tree
+
+
+def check_metric(path, direction, base, new, tol):
+    """Returns (ok, message)."""
+    label = ".".join(path)
+    if new is None:
+        return False, f"{label}: missing from re-run"
+    if base is None:
+        return True, f"{label}: no baseline (skipped)"
+    if direction == "true":
+        ok = bool(new)
+        return ok, f"{label}: {new} (must be true)"
+    base, new = float(base), float(new)
+    if direction == "lower":
+        allowed = base * (1 + tol) if base > 0 else tol
+        ok = new <= allowed
+        arrow = "<="
+    else:                                  # higher
+        allowed = base * (1 - tol)
+        ok = new >= allowed
+        arrow = ">="
+    return ok, (f"{label}: {new:.6g} {arrow} {allowed:.6g} "
+                f"(baseline {base:.6g}, tol {tol:.0%})")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional regression (default 0.25)")
+    ap.add_argument("--sections", nargs="*", default=None,
+                    help=f"subset of {sorted(GATES)}")
+    ap.add_argument("--list", action="store_true",
+                    help="print the gated metrics and exit")
+    args = ap.parse_args()
+    sections = args.sections or sorted(GATES)
+    unknown = set(sections) - set(GATES)
+    if unknown:
+        print(f"unknown sections: {sorted(unknown)}", file=sys.stderr)
+        return 1
+    if args.list:
+        for s in sections:
+            for path, d in GATES[s]["metrics"]:
+                print(f"{s}: {'.'.join(path)} [{d}]")
+        return 0
+
+    baselines = {s: load_metrics(s) for s in sections}
+    missing = [s for s in sections if baselines[s] is None]
+    for s in missing:
+        print(f"WARNING: no committed BENCH_{s}.json — section skipped "
+              "(first run establishes the baseline)")
+    sections = [s for s in sections if baselines[s] is not None]
+    if not sections:
+        print("nothing to gate")
+        return 0
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    for cmd_key in sorted({GATES[s]["cmd"] for s in sections}):
+        cmd = COMMANDS[cmd_key]
+        print(f"$ {' '.join(cmd)}")
+        r = subprocess.run(cmd, cwd=ROOT, env=env)
+        if r.returncode != 0:
+            print(f"FAIL: re-run command '{cmd_key}' exited "
+                  f"{r.returncode}", file=sys.stderr)
+            return 1
+
+    failures = 0
+    for s in sections:
+        new = load_metrics(s)
+        print(f"== {s} ==")
+        for path, direction in GATES[s]["metrics"]:
+            ok, msg = check_metric(path, direction, dig(baselines[s], path),
+                                   dig(new, path), args.tolerance)
+            print(f"  [{'ok' if ok else 'REGRESSION'}] {msg}")
+            failures += 0 if ok else 1
+    if failures:
+        print(f"\n{failures} benchmark regression(s) beyond "
+              f"{args.tolerance:.0%} tolerance", file=sys.stderr)
+        return 1
+    print("\nall gated benchmark metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
