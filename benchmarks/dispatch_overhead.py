@@ -1,0 +1,192 @@
+"""Host-sync-free decode loop: dispatch-overhead + bit-identity sweep (own
+process: it forces XLA host devices for the tp=2 cells before jax
+initializes).
+
+Two measurements:
+
+* **bit_identical** — for every cell of scheduler={continuous, static} x
+  recall_overlap={on, off} x kv_quant={none, int8} x tp={1, 2}, the greedy
+  token streams of the host-sync-free loop (``sync_interval=8``, on-device
+  sampling, donated state) must match the synchronous per-step reference
+  (``sample_on_device=False``) and the static chunked scheduler exactly.
+  Any False fails CI via ``tools/check_bench.py``.
+
+* **dispatch overhead** — a decode-dominated run measures per-step wall
+  time and per-step host-boundary traffic at sync_interval 1 vs 8: steps
+  per sync rises, host bytes per step collapse, and the bytes moved
+  BETWEEN syncs are exactly 0 (the loop's defining property; gated).
+  Wall-clock speedup is recorded but never gated (CI runners differ).
+
+    PYTHONPATH=src python benchmarks/dispatch_overhead.py [--smoke]
+
+Writes the ``BENCH_dispatch.json`` trajectory file (schema: _common.bench_json).
+"""
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=2")
+
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.configs.base import FreeKVConfig  # noqa: E402
+from repro.models.model import init_params  # noqa: E402
+from repro.serving.engine import Request, ServeEngine  # noqa: E402
+from repro.serving.sampling import SamplerConfig  # noqa: E402
+
+SMOKE = dict(arch="granite-3-8b-smoke", context=64, requests=4, slots=2,
+             short_new=3, long_new=6, page_size=8, budget=48,
+             timing_new=48)
+FULL = dict(arch="granite-3-8b-smoke", context=256, requests=8, slots=4,
+            short_new=4, long_new=12, page_size=16, budget=96,
+            timing_new=128)
+
+
+def equal_len_requests(cfg, context, n, short_new, long_new, seed=0):
+    """Equal prompt LENGTHS (contents differ) so the static chunked path
+    pads nothing and scheduler outputs are comparable bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab_size, context
+                                        ).astype(np.int32),
+                    max_new_tokens=short_new if i % 2 == 0 else long_new)
+            for i in range(n)]
+
+
+def _engine(cfg, params, fkv, max_len, slots, scheduler, tp):
+    return ServeEngine(cfg, fkv, params, max_len=max_len, batch_size=slots,
+                       sampler=SamplerConfig(temperature=0.0),
+                       scheduler=scheduler, tp=tp)
+
+
+def identity_sweep(cfg, params, base, max_len, slots, reqs_fn, quiet):
+    ident_all = True
+    configs = {}
+    for overlap in (True, False):
+        for quant in ("none", "int8"):
+            for tp in (1, 2):
+                fkv = dataclasses.replace(base, recall_overlap=overlap,
+                                          kv_quant=quant)
+                runs = {
+                    "continuous/sync": (
+                        "continuous",
+                        dataclasses.replace(fkv, sample_on_device=False)),
+                    "continuous/k8": (
+                        "continuous",
+                        dataclasses.replace(fkv, sync_interval=8)),
+                    "static": ("static", fkv),
+                }
+                tokens = {}
+                for rname, (sched, f) in runs.items():
+                    eng = _engine(cfg, params, f, max_len, slots, sched, tp)
+                    tokens[rname] = [c.tokens for c in eng.generate(reqs_fn())]
+                ref = tokens["continuous/sync"]
+                ident = all(t == ref for t in tokens.values())
+                ident_all &= ident
+                name = (f"sched=all/overlap={int(overlap)}/quant={quant}"
+                        f"/tp={tp}")
+                configs[name] = {"bit_identical": bool(ident)}
+                if not quiet:
+                    print(f"  {name:44s} bit_identical={ident}")
+    return bool(ident_all), configs
+
+
+def timing_sweep(cfg, params, base, max_len, slots, context, timing_new,
+                 quiet):
+    """Decode-dominated single-request run: per-step wall time and
+    host-boundary traffic at sync_interval 1 vs 8."""
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, context).astype(np.int32)
+    out = {}
+    for k in (1, 8):
+        fkv = dataclasses.replace(base, sync_interval=k)
+        eng = _engine(cfg, params, fkv, max_len + timing_new, slots,
+                      "continuous", 1)
+        mk = lambda: [Request(uid=0, tokens=prompt,  # noqa: E731
+                              max_new_tokens=timing_new)]
+        eng.generate(mk())                      # warmup: compile all shapes
+        outs = eng.generate(mk())
+        em = eng.last_metrics
+        d = em.summary()["dispatch"]
+        out[k] = {
+            "us_per_step": 1e6 * outs[0].decode_s / max(outs[0].steps, 1),
+            "steps": em.steps,
+            "host_syncs": d["host_syncs"],
+            "steps_per_sync": d["steps_per_sync"],
+            "host_bytes_per_step": d["host_bytes_per_step"],
+            "nonsync_bytes_per_step": d["nonsync_bytes_per_step"],
+        }
+        if not quiet:
+            print(f"  sync_interval={k}: {out[k]['us_per_step']:.0f} us/step,"
+                  f" {out[k]['steps_per_sync']:.2f} steps/sync,"
+                  f" {out[k]['host_bytes_per_step']:.0f} B/step host traffic")
+    return {
+        "k1": out[1], "k8": out[8],
+        "steps_per_sync": out[8]["steps_per_sync"],
+        "nonsync_bytes_per_step": out[8]["nonsync_bytes_per_step"],
+        # host round trips per decoded token are the dispatch-stall cost the
+        # k-step-ahead loop removes (pulled BYTES stay tiny either way: the
+        # block a sync pulls scales with k, so bytes/step are ~flat)
+        "sync_reduction": (out[1]["host_syncs"]
+                           / max(out[8]["host_syncs"], 1)),
+        "host_bytes_reduction": (out[1]["host_bytes_per_step"]
+                                 / max(out[8]["host_bytes_per_step"], 1e-9)),
+        "dispatch_speedup": (out[1]["us_per_step"]
+                             / max(out[8]["us_per_step"], 1e-9)),
+    }
+
+
+def run(arch, context, requests, slots, short_new, long_new, page_size,
+        budget, timing_new, quiet=False):
+    cfg = get_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    base = FreeKVConfig(method="freekv", page_size=page_size, budget=budget,
+                        n_sink=page_size, n_window=page_size, tau=0.8)
+    max_len = context + long_new + page_size
+    reqs_fn = lambda: equal_len_requests(cfg, context, requests,  # noqa: E731
+                                         short_new, long_new)
+    ident, configs = identity_sweep(cfg, params, base, max_len, slots,
+                                    reqs_fn, quiet)
+    dispatch = timing_sweep(cfg, params, base, max_len, slots, context,
+                            timing_new, quiet)
+    return {"bit_identical": ident, "configs": configs, "dispatch": dispatch}
+
+
+def main():
+    from _common import bench_json
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run — still writes BENCH_dispatch.json")
+    ap.add_argument("--no-json", action="store_true")
+    args = ap.parse_args()
+    config = dict(SMOKE) if args.smoke else dict(FULL)
+    print(f"devices: {jax.devices()}")
+    res = run(**config)
+    status = "PASS" if res["bit_identical"] else "FAIL"
+    print(f"bit_identical across dispatch sweep: {res['bit_identical']} "
+          f"[{status}]")
+    d = res["dispatch"]
+    print(f"steps/sync {d['steps_per_sync']:.2f} | host syncs "
+          f"{d['k1']['host_syncs']} -> {d['k8']['host_syncs']} "
+          f"({d['sync_reduction']:.1f}x) | between-sync bytes/step "
+          f"{d['nonsync_bytes_per_step']:.1f} | dispatch speedup "
+          f"{d['dispatch_speedup']:.2f}x")
+    if not args.no_json:
+        bench_json("dispatch", config, res)
+    if not res["bit_identical"]:
+        sys.exit(1)
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -224,6 +224,27 @@ class FreeKVConfig:
     # scale bytes per transferred block.
     quant_group_size: int = 0
     skip_first_layer: bool = True  # standard practice: no compression on layer 0
+    # Host-sync-free decode loop (serving/scheduler + models.decode_window):
+    # sampling runs on device inside the jitted step (per-slot PRNG key
+    # streams threaded through the loop carry; the greedy path is
+    # bit-identical to host-side argmax) and the engine dispatches up to
+    # ``sync_interval`` decode steps per host synchronization. Between syncs
+    # zero bytes cross the host boundary; tokens, finished masks and
+    # per-step retrieval stats accumulate in device blocks pulled once per
+    # sync. The device loop exits early when every slot finishes, or — when
+    # the admission queue is non-empty — at the first slot turnover, so
+    # occupancy matches the per-step scheduler. sync_interval=1 keeps the
+    # per-step cadence (still on-device sampling, still donated state).
+    sync_interval: int = 8
+    # False = synchronous reference path: full (B, vocab) logits fetched to
+    # the host every step and sampled there. Greedy outputs are bit-identical
+    # either way (and sampled outputs too: both paths share the per-slot
+    # fold_in(key_uid, token_index) streams).
+    sample_on_device: bool = True
+    # Pallas kernel execution mode: "auto" = compiled on TPU, interpret
+    # elsewhere (the CPU backend cannot lower Mosaic); "interpret" /
+    # "compiled" force it (kernels/ops.resolve_interpret).
+    kernel_interpret: str = "auto"
     # ShadowKV-like baseline
     svd_rank: int = 160
     # RaaS-like baseline

@@ -61,7 +61,8 @@ def _attend(cfg, q, k_cat, v_cat, pos_cat, cur_pos, window=None,
             k_cat.reshape(B, kv_, L // p, p, d),
             v_cat.reshape(B, kv_, L // p, p, d),
             pos_cat.reshape(B, kv_, L // p, p), cur_pos,
-            scale=_scale(cfg), softcap=cfg.attn_logit_softcap)
+            scale=_scale(cfg), softcap=cfg.attn_logit_softcap,
+            interpret=ops.resolve_interpret(fkv))
         return o.reshape(B, H, d)
     kv = k_cat.shape[1]
     G = H // kv
@@ -150,13 +151,15 @@ class FreeKVRetriever:
                 from repro.kernels import ops
                 return ops.recall_values_quant(
                     pool_q, scales, idx, bits=self.fkv.quant_bits,
-                    chunk=self.fkv.recall_chunk_pages or None)
+                    chunk=self.fkv.recall_chunk_pages or None,
+                    interpret=ops.resolve_interpret(self.fkv))
             return qz.dequant_recall_values(pool_q, scales, idx,
                                             self.fkv.quant_bits)
         if self.use_kernels:
             from repro.kernels import ops
-            return ops.recall_values(pool, idx,
-                                     chunk=self.fkv.recall_chunk_pages or None)
+            return ops.recall_values(
+                    pool, idx, chunk=self.fkv.recall_chunk_pages or None,
+                    interpret=ops.resolve_interpret(self.fkv))
         return recall.recall_values_only(pool, idx)
 
     def _recall(self, pool, idx):
@@ -170,7 +173,8 @@ class FreeKVRetriever:
                 from repro.kernels import ops
                 return ops.recall_gather_quant(
                     pool_q, scales, idx, bits=self.fkv.quant_bits,
-                    chunk=self.fkv.recall_chunk_pages or None)
+                    chunk=self.fkv.recall_chunk_pages or None,
+                    interpret=ops.resolve_interpret(self.fkv))
             return qz.dequant_recall_pages(pool_q, scales, idx,
                                            self.fkv.quant_bits)
         mesh = self.mesh
@@ -178,7 +182,8 @@ class FreeKVRetriever:
             if self.use_kernels:
                 from repro.kernels import ops
                 return ops.recall_gather(
-                    pool, idx, chunk=self.fkv.recall_chunk_pages or None)
+                    pool, idx, chunk=self.fkv.recall_chunk_pages or None,
+                    interpret=ops.resolve_interpret(self.fkv))
             return recall.recall_pages(pool, idx)
         import math as _math
         ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -84,7 +84,8 @@ def select_pages(cfg: ArchConfig, fkv: FreeKVConfig, q, summ, length, n_sel,
         from repro.kernels import ops
         kv = cfg.n_kv_heads
         scores = ops.page_scores(
-            q.reshape(B, kv, H // kv, d), summ, scale=scale
+            q.reshape(B, kv, H // kv, d), summ, scale=scale,
+            interpret=ops.resolve_interpret(fkv),
         ).reshape(B, H, -1)
     else:
         scores = page_scores_minmax(q, summ, scale)              # (B,H,n)

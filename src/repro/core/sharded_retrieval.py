@@ -114,6 +114,13 @@ class TPGroupShardedRetriever:
     bit-identity) plus integer psums of the transfer counters. Host->device
     recall traffic is per-head-group: each shard only ever touches its own
     slice of the (possibly host-resident, possibly quantized) pool.
+
+    Works unchanged inside the host-sync-free decode window
+    (``models.model.decode_window``): the per-layer shard_map is pure in
+    its sharded state, so the while-loop carry donates/aliases the sharded
+    leaves in place, the psum'ed counters land in the window's (k, B) stat
+    blocks, and — the backbone (hence logits) being replicated — the fused
+    on-device sampler draws identical tokens on every shard.
     """
 
     def __init__(self, cfg: ArchConfig, fkv: FreeKVConfig, mesh, make_inner):

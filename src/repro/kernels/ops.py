@@ -8,11 +8,11 @@ from __future__ import annotations
 
 import functools
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_prefill import flash_prefill as _flash
+from repro.kernels.page_scores import default_interpret as _default_interpret
 from repro.kernels.page_scores import page_scores as _scores
 from repro.kernels.page_summary import page_summary as _summary
 from repro.kernels.paged_attention import paged_attention as _paged
@@ -20,8 +20,18 @@ from repro.kernels.recall_gather import recall_gather as _recall
 from repro.kernels.recall_gather import recall_gather_quant as _recall_quant
 
 
-def _default_interpret():
-    return jax.default_backend() == "cpu"
+def resolve_interpret(fkv=None, interpret=None):
+    """Resolve the kernel execution mode: an explicit ``interpret`` wins,
+    then ``FreeKVConfig.kernel_interpret`` ("interpret" / "compiled"), then
+    the backend default ("auto": compiled on TPU, interpret elsewhere)."""
+    if interpret is not None:
+        return interpret
+    mode = getattr(fkv, "kernel_interpret", "auto") if fkv is not None \
+        else "auto"
+    if mode == "auto":
+        return _default_interpret()
+    assert mode in ("interpret", "compiled"), mode
+    return mode == "interpret"
 
 
 def paged_attention(q, k_pages, v_pages, page_pos, cur_pos, *, scale,

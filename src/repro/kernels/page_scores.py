@@ -26,8 +26,22 @@ def _kernel(q_ref, lo_ref, hi_ref, o_ref, *, scale):
     o_ref[0, 0] = (s * scale).astype(o_ref.dtype)
 
 
-def page_scores(q, summ, *, scale, block_pages=128, interpret=True):
-    """q (B, kv, G, d); summ (B, n_pages, kv, 2, d) -> (B, kv, G, n_pages) f32."""
+def default_interpret() -> bool:
+    """Backend-derived kernel execution mode: compiled (Mosaic) on TPU,
+    interpret on every other backend — the single source of truth
+    (``kernels.ops`` builds its wrappers and ``resolve_interpret`` on it)."""
+    return jax.default_backend() != "tpu"
+
+
+def page_scores(q, summ, *, scale, block_pages=128, interpret=None):
+    """q (B, kv, G, d); summ (B, n_pages, kv, 2, d) -> (B, kv, G, n_pages) f32.
+
+    ``interpret=None`` derives the execution mode from the backend
+    (``default_interpret``) — override per call or globally via
+    ``FreeKVConfig.kernel_interpret`` (see ``kernels.ops.resolve_interpret``).
+    """
+    if interpret is None:
+        interpret = default_interpret()
     B, kv, G, d = q.shape
     N = summ.shape[1]
     NB = min(block_pages, N)

@@ -57,6 +57,17 @@ def main():
                          "packed with fused dequant-on-recall")
     ap.add_argument("--quant-group-size", type=int, default=0,
                     help="channels per fp32 scale group (0 = per page half)")
+    ap.add_argument("--sync-interval", type=int, default=8,
+                    help="decode steps dispatched per host synchronization "
+                         "(host-sync-free loop; 1 = sync every step)")
+    ap.add_argument("--host-sampling", action="store_true",
+                    help="disable on-device sampling (synchronous reference "
+                         "path: one host round trip per decode step; greedy "
+                         "outputs bit-identical either way)")
+    ap.add_argument("--kernel-interpret",
+                    choices=("auto", "interpret", "compiled"), default="auto",
+                    help="Pallas kernel mode: auto = compiled on TPU, "
+                         "interpret elsewhere")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel shards (KV-head-group sharding "
                          "over a 1-D mesh; bit-identical greedy outputs vs "
@@ -78,7 +89,10 @@ def main():
                        n_window=args.page_size * 2, tau=args.tau,
                        recall_overlap=not args.no_overlap,
                        kv_quant=args.kv_quant,
-                       quant_group_size=args.quant_group_size)
+                       quant_group_size=args.quant_group_size,
+                       sync_interval=args.sync_interval,
+                       sample_on_device=not args.host_sampling,
+                       kernel_interpret=args.kernel_interpret)
     eng = ServeEngine(cfg, fkv, params,
                       max_len=args.context + args.new_tokens + args.page_size
                       + args.prefill_bucket,

@@ -732,3 +732,94 @@ def serve_step(cfg: ArchConfig, fkv: FreeKVConfig, params, state, tokens,
     if collect_stats:
         return logits, new_state, stats_acc
     return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# host-sync-free decode: fused sampling + k-step-ahead device loop
+# ---------------------------------------------------------------------------
+# canonical per-step retrieval stat keys (the _info_stats contract); the
+# serving scheduler and the decode window's stat blocks share this tuple
+DECODE_STAT_KEYS = ("corrected", "kv_heads", "sync_pages", "async_pages",
+                    "reused_pages", "sim_sum", "sim_cnt")
+
+
+def serve_step_sampled(cfg: ArchConfig, fkv: FreeKVConfig, params, state,
+                       loop, sampler, mesh=None):
+    """One fused decode step: ``serve_step`` + on-device sampling + finished
+    mask. Nothing here ever touches the host — full (B, vocab) logits never
+    leave the device.
+
+    ``loop`` is the device-resident decode-loop carry (one lane per batch
+    slot, all shapes (B,) unless noted):
+
+      cur    int32   token fed to this step
+      key    uint32 (B, 2)  per-request PRNG key (sampling stream seed)
+      count  int32   tokens generated so far for the slot's request
+      limit  int32   the request's max_new_tokens
+      eos    int32   eos token id, -1 for none
+      fin    bool    slot finished (or empty) — its lane is masked
+
+    Returns (state, loop, tok (B,), valid (B,), stats): ``tok`` is this
+    step's sampled token (greedy path bit-identical to host argmax),
+    ``valid[s]`` marks whether slot s was live entering the step (its token
+    counts; finished lanes keep stepping — row computation is slot-local —
+    but their tokens and stats are discarded by the scheduler). Token ``i``
+    of a request is always sampled with ``fold_in(request_key, i)``, so
+    sample streams are independent of co-scheduling and sync cadence."""
+    from repro.serving import sampling
+    logits, state, stats = serve_step(cfg, fkv, params, state,
+                                      loop["cur"][:, None], mesh=mesh,
+                                      collect_stats=True)
+    keys = sampling.step_keys(loop["key"], loop["count"])
+    tok = sampling.sample_step(logits, sampler, keys)
+    valid = ~loop["fin"]
+    count = loop["count"] + valid.astype(jnp.int32)
+    fin = loop["fin"] | (count >= loop["limit"]) | (tok == loop["eos"])
+    loop = dict(loop, cur=jnp.where(valid, tok, loop["cur"]),
+                count=count, fin=fin)
+    return state, loop, tok, valid, stats
+
+
+def decode_window(cfg: ArchConfig, fkv: FreeKVConfig, params, state, loop,
+                  sampler, k_max: int, mesh=None):
+    """Dispatch up to ``k_max`` fused decode steps with zero host round
+    trips: a ``lax.while_loop`` whose carry holds the decode state, the loop
+    lanes, and (k_max, B) token / valid / stat blocks the host pulls once
+    per sync.
+
+    The loop exits early when every lane is finished, or — when
+    ``loop["stop_turnover"]`` is set (the scheduler has queued admissions
+    waiting) — as soon as any lane that was live at window start finishes,
+    so a freed slot is refilled at the next host boundary instead of idling
+    out the window. Returns (state, loop, toks (k_max, B), valid (k_max, B),
+    stats {key: (k_max, B)}, n_steps). Rows past ``n_steps`` are zero.
+
+    Donation contract: callers jit this with ``donate_argnums`` over
+    ``state`` and ``loop`` (see ``serving.engine``); the while-loop carry
+    aliases the KV slot pool in place, so the pool is never copied — not
+    per step, and not per window."""
+    B = loop["cur"].shape[0]
+    start_live = ~loop["fin"]
+    toks0 = jnp.zeros((k_max, B), jnp.int32)
+    valid0 = jnp.zeros((k_max, B), jnp.bool_)
+    stats0 = {k: jnp.zeros((k_max, B), jnp.float32) for k in DECODE_STAT_KEYS}
+
+    def cond(carry):
+        j, _, lp, _, _, _ = carry
+        live = jnp.any(~lp["fin"])
+        turned = lp["stop_turnover"] & jnp.any(lp["fin"] & start_live)
+        return (j < k_max) & live & ~turned
+
+    def body(carry):
+        j, st, lp, toks, valid, stats = carry
+        st, lp, tok, ok, s = serve_step_sampled(cfg, fkv, params, st, lp,
+                                                sampler, mesh=mesh)
+        toks = jax.lax.dynamic_update_index_in_dim(toks, tok, j, 0)
+        valid = jax.lax.dynamic_update_index_in_dim(valid, ok, j, 0)
+        stats = {k: jax.lax.dynamic_update_index_in_dim(stats[k], s[k], j, 0)
+                 for k in stats}
+        return j + 1, st, lp, toks, valid, stats
+
+    n, state, loop, toks, valid, stats = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), state, loop, toks0, valid0, stats0))
+    return state, loop, toks, valid, stats, n

@@ -1,5 +1,13 @@
 """Serving engine: batched prefill + decode with any retrieval method.
 
+Decode dispatch is host-sync-free by default: sampling is fused into the
+jitted step (on-device, per-slot PRNG key streams), the decode state and
+loop carry are DONATED (the paged KV slot pool updates in place — no
+per-step copy), and up to ``FreeKVConfig.sync_interval`` fused steps run
+per host round trip (``models.model.decode_window``). Greedy outputs are
+bit-identical to the synchronous per-step reference
+(``fkv.sample_on_device=False``). See docs/serving.md.
+
 Two schedulers share the jitted model entry points:
 
 * ``scheduler="continuous"`` (default) — the ``serving.scheduler`` /
@@ -42,12 +50,13 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, FreeKVConfig
 from repro.core.recall_pipeline import RecallFlightTracker
-from repro.models.model import (prefill, prefill_extend, serve_step,
-                                supports_kv_extend)
+from repro.models.model import (decode_window, prefill, prefill_extend,
+                                serve_step, supports_kv_extend)
 from repro.serving.kv_slots import SlotPool
 from repro.serving.metrics import EngineMetrics, RequestMetrics
 from repro.serving.prefix_cache import RadixPrefixCache
-from repro.serving.sampling import SamplerConfig, sample
+from repro.serving.sampling import (SamplerConfig, sample, sample_step,
+                                    step_keys)
 from repro.serving.scheduler import ContinuousScheduler, _request_stats
 
 
@@ -119,9 +128,26 @@ class ServeEngine:
                                              max_len=max_len,
                                              state_dtype=state_dtype,
                                              mesh=mesh))
+        # the decode state (arg 1) is DONATED: XLA updates the paged KV slot
+        # pool, host pool, quant scales, rings and selection buffers in
+        # place instead of copying the whole pytree every step. Callers
+        # (schedulers) reassign their state reference from the output and
+        # never read the consumed one.
         self._step = jax.jit(
             lambda p, s, t: serve_step(cfg, fkv, p, s, t, mesh=mesh,
-                                       collect_stats=True))
+                                       collect_stats=True),
+            donate_argnums=(1,))
+        # host-sync-free decode: up to sync_interval fused (step + on-device
+        # sample) iterations per dispatch, state AND loop carry donated —
+        # zero host round trips and zero state copies inside the window.
+        self.sync_interval = max(1, fkv.sync_interval)
+        self.sample_on_device = bool(fkv.sample_on_device)
+        self._window = jax.jit(
+            lambda p, s, lp: decode_window(cfg, fkv, p, s, lp,
+                                           sampler=sampler,
+                                           k_max=self.sync_interval,
+                                           mesh=mesh),
+            donate_argnums=(1, 2))
         self._can_extend = supports_kv_extend(cfg)
         self.prefix_cache = (RadixPrefixCache(prefix_cache_tokens)
                              if prefix_cache_tokens > 0 and self._can_extend
@@ -167,10 +193,36 @@ class ServeEngine:
                         mesh=self.mesh if self.tp > 1 else None)
 
     def step(self, state, tokens):
-        return self._step(self.params, state, jnp.asarray(tokens))
+        # tokens stay device-resident across decode steps; only a cold
+        # (host/numpy) vector is ever uploaded
+        if not isinstance(tokens, jax.Array):
+            tokens = jnp.asarray(tokens)
+        return self._step(self.params, state, tokens)
+
+    def decode_window(self, state, loop):
+        """Dispatch up to ``sync_interval`` fused decode steps without any
+        host synchronization; ``state`` and ``loop`` are donated."""
+        if self.mesh is not None:
+            # freshly uploaded lanes land single-device; replicate them over
+            # the TP mesh once so donation aliases them thereafter
+            from repro.sharding.rules import replicated_put
+            loop = replicated_put(self.mesh, loop)
+        return self._window(self.params, state, loop)
 
     def sample(self, logits, key):
         return sample(logits, self.sampler, key)
+
+    def sample_lanes(self, logits, keys, counts):
+        """Per-slot sampling on the per-request key streams — the same
+        sampler the fused device step runs, executed outside it (the
+        synchronous reference path and prefill first tokens)."""
+        return sample_step(logits, self.sampler, step_keys(keys, counts))
+
+    def sample_slot(self, logits, req_key, count: int):
+        """Sample one request's token ``count`` from B=1 logits."""
+        keys = jnp.asarray(req_key)[None]
+        return self.sample_lanes(logits, keys,
+                                 jnp.full((1,), count, jnp.int32))
 
     def _pad_prompt(self, tokens: np.ndarray) -> np.ndarray:
         b = self.prefill_bucket
@@ -261,7 +313,7 @@ class ServeEngine:
             out.extend(self._generate_batch(requests[i: i + self.batch_size],
                                             seed + i))
         em = EngineMetrics(num_slots=self.batch_size, scheduler="static",
-                           tp=self.tp)
+                           tp=self.tp, sample_on_device=False)
         from repro.core.offload import host_offload_active
         em.transfer_is_dma = host_offload_active(self.fkv)
         em.page_block_bytes = self.page_block_bytes

@@ -84,7 +84,12 @@ class SlotPool:
 
         self._init_full = _mk_init(num_slots)
         self._template = self._place(_mk_init(1)())
-        self._splice = jax.jit(_splice)
+        # the destination state is DONATED: a splice updates the pool in
+        # place instead of copying every leaf (the pool dominates the state
+        # footprint). The B=1 source (arg 1) is NOT donated — the reset
+        # template is spliced in repeatedly. Callers reassign ``self.state``
+        # immediately, so the consumed buffers are never read again.
+        self._splice = jax.jit(_splice, donate_argnums=(0,))
         self._extract = jax.jit(_extract)
         self.state = self._place(self._init_full())
         self._free: List[int] = list(range(num_slots - 1, -1, -1))

@@ -89,6 +89,19 @@ class EngineMetrics:
     # the KV-head-group shards); each shard moves 1/tp of them over its own
     # host link — see summary()["tp"] for the per-shard view
     tp: int = 1
+    # host-sync-free decode loop (models.decode_window): the scheduler
+    # dispatches up to sync_interval fused steps per host synchronization
+    # and tallies every byte it moves across the host boundary during
+    # decode. With sample_on_device, NOTHING moves between syncs (tokens,
+    # finished masks and stats accumulate in device blocks pulled once per
+    # sync), so nonsync_host_bytes stays 0 by construction; the synchronous
+    # reference path (sample_on_device=False) syncs every step.
+    sync_interval: int = 1
+    sample_on_device: bool = True
+    host_syncs: int = 0               # host bookkeeping boundaries hit
+    sync_bytes_to_host: float = 0.0   # token/valid/stat blocks pulled at syncs
+    sync_bytes_to_device: float = 0.0  # loop-lane pushes at syncs
+    nonsync_host_bytes: float = 0.0   # decode-loop transfers BETWEEN syncs
 
     def record_step(self, n_active: int):
         self.steps += 1
@@ -161,6 +174,25 @@ class EngineMetrics:
                 "dropped": self.dropped_pages * self.page_block_bytes / tp}
 
     @property
+    def steps_per_sync(self) -> float:
+        """Decode steps executed per host synchronization (the k-step-ahead
+        dispatch depth actually realized, early exits included)."""
+        return self.steps / self.host_syncs if self.host_syncs else 0.0
+
+    @property
+    def host_bytes_per_step(self) -> float:
+        """Mean decode-loop host-boundary traffic per executed step."""
+        total = (self.sync_bytes_to_host + self.sync_bytes_to_device
+                 + self.nonsync_host_bytes)
+        return total / self.steps if self.steps else 0.0
+
+    @property
+    def nonsync_bytes_per_step(self) -> float:
+        """Host-boundary bytes moved per step OUTSIDE sync points — 0 under
+        the host-sync-free loop (its defining property)."""
+        return self.nonsync_host_bytes / self.steps if self.steps else 0.0
+
+    @property
     def hidden_fraction(self) -> float:
         """Fraction of transferred recall bytes hidden behind compute.
 
@@ -200,6 +232,17 @@ class EngineMetrics:
             "tp": {
                 "tp": self.tp,
                 "per_shard_transfer_bytes": self.per_shard_transfer_bytes,
+            },
+            "dispatch": {
+                "sync_interval": self.sync_interval,
+                "sample_on_device": self.sample_on_device,
+                "host_syncs": self.host_syncs,
+                "steps_per_sync": self.steps_per_sync,
+                "sync_bytes_to_host": self.sync_bytes_to_host,
+                "sync_bytes_to_device": self.sync_bytes_to_device,
+                "nonsync_host_bytes": self.nonsync_host_bytes,
+                "nonsync_bytes_per_step": self.nonsync_bytes_per_step,
+                "host_bytes_per_step": self.host_bytes_per_step,
             },
             "kv_quant": {
                 "mode": self.kv_quant,

@@ -1,4 +1,23 @@
-"""Token sampling: greedy / temperature / top-p (nucleus)."""
+"""Token sampling: greedy / temperature / top-p (nucleus).
+
+Two entry points share the same math:
+
+* ``sample(logits, cfg, key)`` — the host-driven batch sampler (static
+  scheduler, synchronous reference path). One key per call.
+* ``sample_step(logits, cfg, keys)`` — the on-device per-slot sampler fused
+  into the jitted decode step (``models.model.serve_step_sampled``). ``keys``
+  carries ONE PRNG key per batch slot, so a request's sample stream depends
+  only on its own key stream — not on which slot it landed in, which
+  requests it was co-scheduled with, or how many steps the engine dispatches
+  per host sync. The greedy path is a plain argmax, bit-identical to the
+  host-side sampler.
+
+Per-request key streams: ``request_key(seed, uid)`` seeds the stream and
+token ``i`` of the request is sampled with ``fold_in(request_key, i)``
+(``step_keys`` vectorizes the fold over slots). Slot turnover re-seeds the
+slot's lane from the incoming request's uid, so streams are stable across
+scheduling decisions (tests/test_async_decode.py).
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -13,10 +32,8 @@ class SamplerConfig:
     top_p: float = 1.0
 
 
-def sample(logits, cfg: SamplerConfig, key):
-    """logits (B, V) -> tokens (B,) int32."""
-    if cfg.temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+def _filter_logits(logits, cfg: SamplerConfig):
+    """Temperature + nucleus filtering shared by both samplers."""
     logits = logits / cfg.temperature
     if cfg.top_p < 1.0:
         sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
@@ -25,4 +42,39 @@ def sample(logits, cfg: SamplerConfig, key):
         cutoff_idx = jnp.sum(cum < cfg.top_p, axis=-1, keepdims=True)
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
         logits = jnp.where(logits >= cutoff, logits, -jnp.inf)
-    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    return logits
+
+
+def sample(logits, cfg: SamplerConfig, key):
+    """logits (B, V) -> tokens (B,) int32. One key for the whole batch."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, _filter_logits(logits, cfg), axis=-1).astype(jnp.int32)
+
+
+def sample_step(logits, cfg: SamplerConfig, keys):
+    """Per-slot sampling: logits (B, V), keys (B,) PRNG keys -> (B,) int32.
+
+    Safe to call inside jit (the fused decode step) or outside (the
+    synchronous reference path) — identical results either way."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = _filter_logits(logits, cfg)
+    return jax.vmap(
+        lambda k, lg: jax.random.categorical(k, lg))(keys, logits
+                                                     ).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# per-request key streams
+# ---------------------------------------------------------------------------
+def request_key(seed: int, uid: int):
+    """The PRNG key seeding request ``uid``'s sample stream for one run."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), uid)
+
+
+def step_keys(slot_keys, counts):
+    """Per-slot step keys: fold each slot's request key by its per-request
+    token index. slot_keys (B, 2) uint32, counts (B,) int32 -> (B, 2)."""
+    return jax.vmap(jax.random.fold_in)(slot_keys, counts)

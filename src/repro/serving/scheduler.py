@@ -1,22 +1,41 @@
 """Continuous-batching scheduler: admission queue + per-slot request lifecycle.
 
 Requests move QUEUED -> PREFILL -> DECODE -> DONE. Slots are refilled at every
-step boundary, so a short request's completion immediately frees capacity for
+host boundary, so a short request's completion immediately frees capacity for
 the next queued request instead of idling until the longest co-scheduled
 request drains (the static chunked engine's behavior). Finished slots stop
-being stepped the moment they drain: the slot is reset and refilled, and no
-finished row ever contributes to the aggregated retrieval statistics.
+contributing tokens or statistics the moment they drain.
+
+Decode dispatch is HOST-SYNC-FREE (``fkv.sample_on_device``, the default):
+the scheduler ships a device-resident loop carry — current tokens, per-slot
+PRNG key streams, generated counts, limits, eos ids, finished mask — into
+``backend.decode_window``, which runs up to ``fkv.sync_interval`` fused
+(decode + on-device sample) steps with the decode state *donated* (updated
+in place, never copied) and zero host round trips. The device loop exits
+early when every lane finishes or, when admissions are queued, at the first
+slot turnover. At each sync the host pulls the (k, B) token / valid / stat
+blocks once, appends tokens, detokenizes, frees + refills slots, and only
+re-uploads the tiny per-slot lanes that changed. Between syncs nothing
+crosses the host boundary (``EngineMetrics.summary()["dispatch"]``).
+
+``fkv.sample_on_device = False`` keeps the synchronous reference path: one
+host synchronization per decode step (sampled on the same per-request key
+streams, so outputs are identical — and greedy is bit-identical across both
+paths and every ``sync_interval``).
 
 The scheduler is backend-agnostic: it drives any object exposing
 
     prefill_one(request) -> (logits (1, V), B=1 decode state, prefix_hit_tokens,
                              padded_prompt_tokens)
     step(state, tokens (B, 1)) -> (logits (B, V), state, stats)
-    sample(logits, key) -> tokens (B,)
+    sample_slot(logits, req_key, count) -> tokens (1,)
+    sample_lanes(logits, keys (B,2), counts (B,)) -> tokens (B,)
+    decode_window(state, loop) -> (state, loop, toks, valid, stats, n)
     make_slot_pool(num_slots) -> kv_slots.SlotPool
     page_block_bytes -> int
 
-(``ServeEngine`` is the production backend; tests inject lightweight fakes.)
+(``ServeEngine`` is the production backend; tests inject lightweight fakes.
+A backend without ``decode_window`` falls back to the synchronous path.)
 """
 from __future__ import annotations
 
@@ -25,17 +44,16 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.recall_pipeline import RecallFlightTracker
+from repro.models.model import DECODE_STAT_KEYS as _STAT_KEYS
 from repro.serving.metrics import EngineMetrics, RequestMetrics
+from repro.serving.sampling import request_key
 
 # request lifecycle states
 QUEUED, PREFILL, DECODE, DONE = "queued", "prefill", "decode", "done"
-
-_STAT_KEYS = ("corrected", "kv_heads", "sync_pages", "async_pages",
-              "reused_pages", "sim_sum", "sim_cnt")
 
 
 @dataclass
@@ -67,6 +85,56 @@ def _request_stats(agg: Dict[str, float]) -> dict:
     return stats
 
 
+class _Lanes:
+    """Host mirror of the device decode-loop carry: one lane per slot.
+
+    The device copy is rebuilt (one tiny (B,)-vector upload) only when a
+    lane changed at a sync boundary — admission, turnover — so steady-state
+    decode re-uploads nothing, not even the token vector."""
+
+    FIELDS = ("cur", "key", "count", "limit", "eos", "fin")
+
+    def __init__(self, num_slots: int):
+        self.cur = np.zeros(num_slots, np.int32)
+        self.key = np.zeros((num_slots, 2), np.uint32)
+        self.count = np.zeros(num_slots, np.int32)
+        self.limit = np.ones(num_slots, np.int32)
+        self.eos = np.full(num_slots, -1, np.int32)
+        self.fin = np.ones(num_slots, bool)      # empty lanes are "finished"
+        self.dirty = True
+        self._dev = None
+
+    def admit(self, slot: int, tok: int, key_np, count: int, limit: int,
+              eos: Optional[int]):
+        self.cur[slot] = tok
+        self.key[slot] = key_np
+        self.count[slot] = count
+        self.limit[slot] = limit
+        self.eos[slot] = -1 if eos is None else eos
+        self.fin[slot] = False
+        self.dirty = True
+
+    def retire(self, slot: int):
+        self.fin[slot] = True
+        self.dirty = True
+
+    def device_loop(self, stop_turnover: bool, em: EngineMetrics):
+        """The loop carry to ship; uploads lanes only when dirty."""
+        if self.dirty or self._dev is None:
+            self._dev = {f: jnp.asarray(getattr(self, f)) for f in self.FIELDS}
+            em.sync_bytes_to_device += sum(
+                getattr(self, f).nbytes for f in self.FIELDS)
+            self.dirty = False
+        loop = dict(self._dev)
+        loop["stop_turnover"] = jnp.asarray(stop_turnover)
+        return loop
+
+    def carry_back(self, loop):
+        """Keep the donated device carry for the next window (the host
+        mirrors are updated from the pulled blocks as tokens are applied)."""
+        self._dev = {f: loop[f] for f in self.FIELDS}
+
+
 class ContinuousScheduler:
     """Drives one run of requests to completion over a fixed slot pool."""
 
@@ -77,6 +145,8 @@ class ContinuousScheduler:
     def run(self, requests, seed: int = 0):
         """Returns (tracked records in submission order, EngineMetrics)."""
         backend, pool = self.backend, self.pool
+        on_device = (bool(getattr(backend, "sample_on_device", False))
+                     and hasattr(backend, "decode_window"))
         t0 = time.perf_counter()
         now = lambda: time.perf_counter() - t0  # noqa: E731
 
@@ -89,21 +159,23 @@ class ContinuousScheduler:
 
         em = EngineMetrics(num_slots=pool.num_slots, scheduler="continuous",
                            page_block_bytes=backend.page_block_bytes,
-                           tp=getattr(backend, "tp", 1))
+                           tp=getattr(backend, "tp", 1),
+                           sync_interval=(getattr(backend, "sync_interval", 1)
+                                          if on_device else 1),
+                           sample_on_device=on_device)
         # per-slot in-flight staged recall: the double buffer a slot carries
         # out of step t is consumed by step t+1 unless the slot turns over
         flight = getattr(backend, "recall_tracker", None) \
             or RecallFlightTracker()
         active: Dict[int, _Tracked] = {}
-        cur = np.zeros((pool.num_slots,), np.int32)
-        key = jax.random.PRNGKey(seed)
+        lanes = _Lanes(pool.num_slots)
         done: List[_Tracked] = []
-        step_idx = 0
+        self._step_idx = 0
 
         def finish(tr: _Tracked, slot: Optional[int]):
             tr.state = DONE
             tr.metrics.finish_t = now()
-            tr.metrics.finish_step = step_idx
+            tr.metrics.finish_step = self._step_idx
             tr.metrics.new_tokens = len(tr.tokens)
             tr.metrics.prefill_s = tr.prefill_s
             tr.metrics.decode_s = tr.decode_s
@@ -111,9 +183,35 @@ class ContinuousScheduler:
             if slot is not None:
                 flight.invalidate(slot)   # staged buffer abandoned in flight
                 pool.free(slot)
+                lanes.retire(slot)
+
+        def apply_step(stats_np, toks_np, live_slots, dt):
+            """Host bookkeeping for ONE decode step: telemetry, token
+            append, finish detection. Shared by both dispatch modes."""
+            em.record_step(len(live_slots))
+            for k in ("sync_pages", "async_pages", "reused_pages"):
+                setattr(em, k, getattr(em, k)
+                        + float(sum(stats_np[k][s] for s in live_slots)))
+            for s in live_slots:
+                flight.note_step(s, float(stats_np["async_pages"][s]),
+                                 float(stats_np["sync_pages"][s]),
+                                 float(stats_np["reused_pages"][s]))
+            for s in live_slots:
+                tr = active[s]
+                tr.decode_s += dt
+                for k in _STAT_KEYS:
+                    tr.agg[k] += float(stats_np[k][s])
+                tok = int(toks_np[s])
+                tr.tokens.append(tok)
+                lanes.cur[s] = tok
+                lanes.count[s] += 1
+                if tr.finished():
+                    del active[s]
+                    finish(tr, s)
+            self._step_idx += 1
 
         while queue or active:
-            # -- admission: refill freed slots at the step boundary --------
+            # -- admission: refill freed slots at the host boundary --------
             while queue and pool.free_count:
                 tr = queue.popleft()
                 if tr.req.max_new_tokens <= 0:
@@ -125,9 +223,10 @@ class ContinuousScheduler:
                 tp = time.perf_counter()
                 logits1, state1, hit, padded = backend.prefill_one(tr.req)
                 pool.insert(state1, slot)
-                pkey = jax.random.fold_in(
-                    jax.random.fold_in(key, 0x5EED), tr.req.uid)
-                tok = int(np.asarray(backend.sample(logits1, pkey))[0])
+                # per-request sample stream: token i <- fold_in(rkey, i),
+                # independent of slot placement and co-scheduling
+                rkey = request_key(seed, tr.req.uid)
+                tok = int(np.asarray(backend.sample_slot(logits1, rkey, 0))[0])
                 tr.prefill_s = time.perf_counter() - tp
                 tr.metrics.first_token_t = now()
                 tr.metrics.prefix_hit_tokens = hit
@@ -139,46 +238,71 @@ class ContinuousScheduler:
                     finish(tr, slot)
                 else:
                     active[slot] = tr
-                    cur[slot] = tok
+                    lanes.admit(slot, tok, np.asarray(rkey), 1,
+                                tr.req.max_new_tokens,
+                                getattr(tr.req, "eos_token", None))
             if not active:
                 continue
 
-            # -- one decode step over the full slot batch ------------------
             pool.flush_resets()          # lazily reset freed-but-idle slots
-            ts = time.perf_counter()
-            logits, new_state, stats = backend.step(pool.state, cur[:, None])
-            key = jax.random.fold_in(key, step_idx)
-            toks = np.asarray(backend.sample(logits, key))
-            stats_np = {k: (np.asarray(stats[k]) if k in stats
-                            else np.zeros(pool.num_slots)) for k in _STAT_KEYS}
-            dt = time.perf_counter() - ts
-            pool.state = new_state
-            em.record_step(len(active))
-            em.sync_pages += float(
-                sum(stats_np["sync_pages"][s] for s in active))
-            em.async_pages += float(
-                sum(stats_np["async_pages"][s] for s in active))
-            em.reused_pages += float(
-                sum(stats_np["reused_pages"][s] for s in active))
-            for s in active:
-                flight.note_step(s, float(stats_np["async_pages"][s]),
-                                 float(stats_np["sync_pages"][s]),
-                                 float(stats_np["reused_pages"][s]))
-
-            for slot, tr in list(active.items()):
-                tr.decode_s += dt
-                for k in _STAT_KEYS:
-                    tr.agg[k] += float(stats_np[k][slot])
-                tok = int(toks[slot])
-                tr.tokens.append(tok)
-                cur[slot] = tok
-                if tr.finished():
-                    del active[slot]
-                    finish(tr, slot)
-            step_idx += 1
+            if on_device:
+                self._window_steps(backend, pool, em, lanes, apply_step,
+                                   stop_turnover=bool(queue))
+            else:
+                self._sync_step(backend, pool, em, lanes, apply_step)
 
         em.wall_s = now()
         em.dropped_pages = flight.dropped_pages
         done.sort(key=lambda tr: tr.order)
         em.requests = [tr.metrics for tr in done]
         return done, em
+
+    # ------------------------------------------------------------------
+    # decode dispatch modes
+    # ------------------------------------------------------------------
+    def _window_steps(self, backend, pool, em, lanes, apply_step,
+                      stop_turnover: bool):
+        """Host-sync-free mode: dispatch up to sync_interval fused steps,
+        then sync once — pull the token/valid/stat blocks, apply them."""
+        loop = lanes.device_loop(stop_turnover, em)
+        ts = time.perf_counter()
+        state, loop, toks, valid, stats, n = backend.decode_window(
+            pool.state, loop)
+        pool.state = state
+        lanes.carry_back(loop)
+        n = int(n)                                  # the one host sync
+        toks_np = np.asarray(toks)
+        valid_np = np.asarray(valid)
+        stats_np = {k: np.asarray(stats[k]) for k in _STAT_KEYS}
+        dt = time.perf_counter() - ts
+        em.host_syncs += 1
+        em.sync_bytes_to_host += (4 + toks_np.nbytes + valid_np.nbytes
+                                  + sum(v.nbytes for v in stats_np.values()))
+        per_dt = dt / max(n, 1)
+        for j in range(n):
+            live = [s for s in np.nonzero(valid_np[j])[0]]
+            apply_step({k: stats_np[k][j] for k in _STAT_KEYS},
+                       toks_np[j], live, per_dt)
+
+    def _sync_step(self, backend, pool, em, lanes, apply_step):
+        """Synchronous reference mode: one decode step, one host sync —
+        tokens sampled outside the jitted step, stats pulled every step."""
+        loop = lanes.device_loop(False, em)
+        ts = time.perf_counter()
+        logits, state, stats = backend.step(pool.state, loop["cur"][:, None])
+        toks = backend.sample_lanes(logits, loop["key"], loop["count"])
+        toks_np = np.asarray(toks)
+        stats_np = {k: (np.asarray(stats[k]) if k in stats
+                        else np.zeros(pool.num_slots)) for k in _STAT_KEYS}
+        dt = time.perf_counter() - ts
+        pool.state = state
+        em.host_syncs += 1
+        em.nonsync_host_bytes += 0.0     # the sync IS the step boundary
+        em.sync_bytes_to_host += toks_np.nbytes + sum(
+            v.nbytes for v in stats_np.values())
+        # lanes (cur/count) change every step on this path: mark dirty so
+        # the next step re-uploads them — the per-step round trip the
+        # host-sync-free loop exists to remove
+        lanes.dirty = True
+        apply_step(stats_np, toks_np, [s for s in np.nonzero(~lanes.fin)[0]],
+                   dt)

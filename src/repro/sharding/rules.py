@@ -190,3 +190,22 @@ def decode_state_shardings(cfg: ArchConfig, mesh, state_shape, fkv=None):
 
 def replicated(mesh, tree_shape):
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree_shape)
+
+
+def replicated_put(mesh, tree):
+    """Place every leaf of ``tree`` replicated over ``mesh``, leaving leaves
+    that already carry a mesh sharding untouched.
+
+    Used for the decode-loop carry (tokens, per-slot PRNG keys, finished
+    mask — ``serving.scheduler``) under tensor-parallel serving: a freshly
+    uploaded lane lands as a single-device array, which the donated window
+    jit would otherwise reshard every dispatch; placing it replicated once
+    lets the donation alias it in place for the rest of its life."""
+    target = NamedSharding(mesh, P())
+
+    def f(leaf):
+        if isinstance(getattr(leaf, "sharding", None), NamedSharding):
+            return leaf
+        return jax.device_put(leaf, target)
+
+    return jax.tree.map(f, tree)

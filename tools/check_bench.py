@@ -42,6 +42,8 @@ COMMANDS = {
                   "ablation", "quant"],
     "sharded": [sys.executable, "benchmarks/sharded_throughput.py",
                 "--smoke"],
+    "dispatch": [sys.executable, "benchmarks/dispatch_overhead.py",
+                 "--smoke"],
 }
 
 # (path-into-metrics, direction); direction: "lower" | "higher" | "true"
@@ -73,6 +75,20 @@ GATES = {
             (("ratios", "int8_bytes_reduction"), "higher"),
             (("ratios", "int8_acc_drop"), "lower"),
             (("ratios", "int4_acc_drop"), "lower"),
+        ],
+    },
+    "dispatch": {
+        "cmd": "dispatch",
+        "metrics": [
+            # host-sync-free loop: every (scheduler, overlap, quant, tp)
+            # cell bit-identical to the synchronous reference; zero bytes
+            # cross the host boundary between syncs; k-step-ahead dispatch
+            # amortizes syncs and collapses per-step host traffic.
+            # us_per_step / dispatch_speedup are recorded, never gated.
+            (("bit_identical",), "true"),
+            (("dispatch", "nonsync_bytes_per_step"), "lower"),
+            (("dispatch", "steps_per_sync"), "higher"),
+            (("dispatch", "sync_reduction"), "higher"),
         ],
     },
     "sharded": {
