@@ -12,7 +12,13 @@ are CPU-relative, the *ratios* are the result):
    radix-trie prefix cache the engine skips the transformer forward for the
    matched span; mean TTFT of the cache-hit requests must drop >= 30%.
 
-    PYTHONPATH=src python benchmarks/serving_throughput.py [--json out.json]
+``--smoke`` runs a smaller preset and writes ``BENCH_serving.json`` at the
+repo root (via ``benchmarks/_common.bench_json``) — the committed baseline
+``tools/check_bench.py`` gates: throughput_pass / ttft_pass booleans and
+the within-run speedup/reduction ratios (wall-clock itself is never gated).
+
+    PYTHONPATH=src python benchmarks/serving_throughput.py [--smoke]
+        [--json out.json]
 """
 from __future__ import annotations
 
@@ -21,6 +27,7 @@ import json
 import os
 import sys
 
+sys.path.insert(0, os.path.dirname(__file__))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
@@ -133,7 +140,13 @@ def run_prefix(cfg, fkv, params, args):
     return out
 
 
+SMOKE = dict(context=128, requests=6, slots=2, short_new=3, long_new=12,
+             bucket=32, page_size=16, budget=96, prefix_context=512,
+             prefix_requests=4)
+
+
 def main():
+    from _common import bench_json
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m-smoke")
     ap.add_argument("--method", default="freekv")
@@ -149,7 +162,12 @@ def main():
     ap.add_argument("--prefix-requests", type=int, default=4)
     ap.add_argument("--cache-tokens", type=int, default=1 << 20)
     ap.add_argument("--json", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized preset — writes BENCH_serving.json")
     args = ap.parse_args()
+    if args.smoke:
+        for k, v in SMOKE.items():
+            setattr(args, k, v)
 
     cfg = get_config(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -159,6 +177,22 @@ def main():
     results = {"args": vars(args),
                "mixed": run_mixed(cfg, fkv, params, args),
                "prefix": run_prefix(cfg, fkv, params, args)}
+    if args.smoke:
+        cont = results["mixed"]["continuous"]
+        metrics = {
+            "throughput_speedup": results["mixed"]["throughput_speedup"],
+            "throughput_pass": results["mixed"]["throughput_pass"],
+            "ttft_reduction": results["prefix"]["ttft_reduction"],
+            "ttft_pass": results["prefix"]["ttft_pass"],
+            "slot_occupancy": cont["slot_occupancy"],
+            "spec_hit_rate_mean": cont["speculation"]["hit_rate_mean"],
+            # wall-clock latency quantiles recorded for trend-watching only
+            # (never gated — see tools/check_bench.py)
+            "ttft_p90_s": cont["latency"]["ttft_s"]["p90"],
+            "itl_p90_s": cont["latency"]["itl_s"]["p90"],
+        }
+        bench_json("serving", {"arch": args.arch, "method": args.method,
+                               **SMOKE}, metrics)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2, default=str)

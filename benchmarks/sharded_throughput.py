@@ -96,13 +96,13 @@ def run(arch, context, requests, slots, short_new, long_new, bucket,
                     "tokens_per_s": s["tokens_per_s"],
                     "wall_s": s["wall_s"],
                     "slot_occupancy": s["slot_occupancy"],
-                    "recall_bytes_sync": s["recall_bytes_sync"],
-                    "recall_bytes_async": s["recall_bytes_async"],
+                    "recall_bytes_sync": s["recall_overlap"]["exposed_bytes"],
+                    "recall_bytes_async": s["recall_overlap"]["hidden_bytes"],
                     "per_shard_transfer_bytes":
                         s["tp"]["per_shard_transfer_bytes"],
                 }
             tp_hi = tps[-1]
-            sync1 = summaries[tps[0]]["recall_bytes_sync"]
+            sync1 = summaries[tps[0]]["recall_overlap"]["exposed_bytes"]
             row["per_shard_sync_reduction"] = (
                 sync1 / max(row[f"tp{tp_hi}"]["per_shard_transfer_bytes"]
                             ["sync"], 1e-9))

@@ -49,6 +49,8 @@ from typing import Dict, Optional
 import jax.numpy as jnp
 
 from repro.core import recall
+from repro.obs.trace import (SPAN_RECALL_REUSE, SPAN_RECALL_STAGED,
+                             SPAN_RECALL_TOPUP, annotate)
 
 
 def match_resident(new_idx, prev_idx):
@@ -115,18 +117,21 @@ class RecallExecutor:
         """
         dt = prev_k.dtype
         hit, src = match_resident(new_idx, prev_idx)
-        reused_k = _take_pages(prev_k, src)
-        reused_v = _take_pages(prev_v, src)
+        with annotate(SPAN_RECALL_REUSE):
+            reused_k = _take_pages(prev_k, src)
+            reused_v = _take_pages(prev_v, src)
         valid = new_idx >= 0
         need3 = need[:, :, None]
 
         # critical path: corrected heads' non-resident pages only
         topup_idx = jnp.where(need3 & ~hit & valid, new_idx, -1)
-        tk, tv = self.recall_fn(pool, topup_idx)
+        with annotate(SPAN_RECALL_TOPUP):
+            tk, tv = self.recall_fn(pool, topup_idx)
         tk, tv = tk.astype(dt), tv.astype(dt)
         # overlapped: everything else that is fresh and non-resident
         stage_idx = jnp.where(~need3 & ~hit & valid, new_idx, -1)
-        sk, sv = self.recall_fn(pool, stage_idx)
+        with annotate(SPAN_RECALL_STAGED):
+            sk, sv = self.recall_fn(pool, stage_idx)
         sk, sv = sk.astype(dt), sv.astype(dt)
 
         hit5 = hit[..., None, None]

@@ -31,8 +31,10 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, FreeKVConfig
 from repro.core import paging, recall, selection
 from repro.core.correction import corrected_heads
-from repro.core.recall_pipeline import RecallExecutor
+from repro.core.recall_pipeline import RecallExecutor, match_resident
 from repro.models.layers import softcap
+from repro.obs.trace import (SPAN_ATTN_COMPUTE, SPAN_RECALL_CORRECTION,
+                             SPAN_RECALL_SELECT, annotate)
 from repro.quant import quantizers as qz
 
 NEG_INF = -1e30
@@ -242,6 +244,7 @@ class FreeKVRetriever:
             else:
                 corr = jnp.ones((q.shape[0], cfg.n_kv_heads), bool)
                 sim = jnp.zeros((q.shape[0], cfg.n_kv_heads), jnp.float32)
+            prev_idx = state["sel_idx"]
             # NOTE: append happens INSIDE the shard body (the page write is
             # masked to its owning shard) — state here is pre-append
             o, updates, new_k, new_v, new_idx = sharded_decode_step(
@@ -252,9 +255,18 @@ class FreeKVRetriever:
                          sel_idx=new_idx,
                          qprev=q.astype(state["qprev"].dtype))
             n_sel = new_idx.shape[2]
+            # speculation quality: the fused step fetches fresh regardless,
+            # but selection overlap vs the previous step is still the
+            # telemetry of interest (docs/observability.md)
+            sel_pages = jnp.sum(new_idx >= 0, axis=(1, 2))
+            spec_hit = jnp.sum(match_resident(new_idx, prev_idx)[0],
+                               axis=(1, 2))
             info = {"corrected": corr, "similarity": sim,
                     "sync_pages": jnp.sum(corr, axis=1) * n_sel,
                     "async_pages": jnp.sum(~corr, axis=1) * n_sel,
+                    "sel_pages": sel_pages,
+                    "spec_hit_pages": spec_hit,
+                    "churn_pages": sel_pages - spec_hit,
                     "granularity": "page"}
             return o, state, info
 
@@ -264,14 +276,22 @@ class FreeKVRetriever:
         q_sel = q
         if self.proxy_query and q_proxy is not None:
             q_sel = q_proxy
-        new_idx, _ = selection.select_pages(
-            cfg, fkv, q_sel, state["summ"], state["length"], self._n_sel(state))
+        with annotate(SPAN_RECALL_SELECT):
+            new_idx, _ = selection.select_pages(
+                cfg, fkv, q_sel, state["summ"], state["length"],
+                self._n_sel(state))
         n_sel = new_idx.shape[2]
         B = q.shape[0]
         reused = jnp.zeros((B,), jnp.int32)
+        # speculation quality (repro.obs): how much of the new selection the
+        # previous step's speculative buffer already holds
+        sel_pages = jnp.sum(new_idx >= 0, axis=(1, 2))
+        spec_hit = jnp.sum(match_resident(new_idx, state["sel_idx"])[0],
+                           axis=(1, 2))
 
         if self.speculative:
-            corr, sim = corrected_heads(cfg, fkv, q, state["qprev"])
+            with annotate(SPAN_RECALL_CORRECTION):
+                corr, sim = corrected_heads(cfg, fkv, q, state["qprev"])
             first_step = state["qprev"].astype(jnp.float32)
             is_cold = jnp.all(first_step == 0)       # no prefill qprev -> correct
             corr = corr | is_cold
@@ -306,8 +326,9 @@ class FreeKVRetriever:
             async_pages = jnp.sum(~corr, axis=1) * n_sel
 
         k_cat, v_cat, pos = _cat_regions(fkv, state, use_k, use_v, use_idx, p)
-        o = _attend(cfg, q, k_cat, v_cat, pos, cur_pos, fkv=fkv,
-                    use_kernels=self.use_kernels)
+        with annotate(SPAN_ATTN_COMPUTE):
+            o = _attend(cfg, q, k_cat, v_cat, pos, cur_pos, fkv=fkv,
+                        use_kernels=self.use_kernels)
 
         state = dict(state, sel_k=new_k, sel_v=new_v, sel_idx=new_idx,
                      qprev=q.astype(state["qprev"].dtype))
@@ -319,6 +340,11 @@ class FreeKVRetriever:
             "async_pages": async_pages,
             # blocks served from the resident double buffer (no transfer)
             "reused_pages": reused,
+            # speculation quality: selected page slots / buffer hits /
+            # pages entering the top-k this step
+            "sel_pages": sel_pages,
+            "spec_hit_pages": spec_hit,
+            "churn_pages": sel_pages - spec_hit,
             "granularity": "token" if self.token_wise_recall else "page",
         }
         return o, state, info
@@ -635,8 +661,13 @@ class ShadowKVRetriever(FreeKVRetriever):
         cur_pos = state["length"]
         state = paging.append_token(state, k_new, v_new)
         n_sel = self._n_sel(state)
-        idx, _ = selection.select_pages(
-            cfg, fkv, q, state["summ"], state["length"], n_sel)
+        with annotate(SPAN_RECALL_SELECT):
+            idx, _ = selection.select_pages(
+                cfg, fkv, q, state["summ"], state["length"], n_sel)
+        # speculation quality: selection overlap vs the previous resident set
+        sel_pages = jnp.sum(idx >= 0, axis=(1, 2))
+        spec_hit = jnp.sum(match_resident(idx, state["sel_idx"])[0],
+                           axis=(1, 2))
         # keys: reconstruct selected pages from the low-rank factors
         safe = jnp.clip(idx, 0, state["pool"].shape[1] - 1)
         tok = safe[..., None] * p + jnp.arange(p)[None, None, None, :]
@@ -668,6 +699,9 @@ class ShadowKVRetriever(FreeKVRetriever):
                 "sync_pages": sync_pages,
                 "async_pages": jnp.zeros((B,), jnp.int32),
                 "reused_pages": reused,
+                "sel_pages": sel_pages,
+                "spec_hit_pages": spec_hit,
+                "churn_pages": sel_pages - spec_hit,
                 "similarity": jnp.zeros((B, kv)), "granularity": "page"}
         return o, state, info
 

@@ -136,8 +136,10 @@ class TPGroupShardedRetriever:
         self.offloaded = getattr(self._global, "offloaded", False)
 
     # counters summed over (local) KV heads inside the shard body — psum'ed
-    # to their exact global integer values
-    _COUNTERS = ("sync_pages", "async_pages", "reused_pages")
+    # to their exact global integer values (includes the speculation-quality
+    # telemetry so per-step hit/churn counts stay exact under tp>1)
+    _COUNTERS = ("sync_pages", "async_pages", "reused_pages", "sel_pages",
+                 "spec_hit_pages", "churn_pages")
 
     def _hspec(self):
         return P(None, "model", None)          # (B, H|kv, d) head-dim shard

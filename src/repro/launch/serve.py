@@ -14,8 +14,12 @@ per KV-head group, the whole retrieval step runs shard-local, and greedy
 outputs are bit-identical to ``--tp 1`` (docs/serving.md).
 
 Prints per-request completions plus ``EngineMetrics.summary()`` (tokens/s,
-slot occupancy, TTFT, hidden vs exposed recall transfer). See
-``docs/serving.md`` and ``docs/architecture.md``.
+slot occupancy, TTFT, hidden vs exposed recall transfer). Observability
+exporters (docs/observability.md): ``--metrics-out`` appends one JSONL
+metrics-registry snapshot per run, ``--prom-out`` writes the Prometheus
+text exposition, ``--trace-out`` writes a Chrome-trace/Perfetto JSON of
+the request lifecycle + recall-pipeline spans. See ``docs/serving.md``
+and ``docs/architecture.md``.
 """
 import argparse
 import json
@@ -27,6 +31,7 @@ from repro.configs import get_config
 from repro.configs.base import FreeKVConfig
 from repro.data.synthetic import needle_stream
 from repro.models.model import init_params
+from repro.obs import Observability, TraceRecorder
 from repro.serving.engine import Request, ServeEngine
 from repro.serving.sampling import SamplerConfig
 
@@ -73,6 +78,17 @@ def main():
                          "over a 1-D mesh; bit-identical greedy outputs vs "
                          "--tp 1). On CPU, forces XLA host devices when "
                          "needed — set --tp before other jax users import.")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="append a JSONL metrics-registry snapshot "
+                         "(counters/gauges/histograms) after the run")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="write the Prometheus text exposition after the run")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON (request "
+                         "lifecycle + recall-pipeline spans)")
+    ap.add_argument("--no-obs", action="store_true",
+                    help="disable per-step observability histograms/spans "
+                         "(registry counters always run)")
     args = ap.parse_args()
 
     if args.tp > 1 and "--xla_force_host_platform_device_count" not in \
@@ -93,6 +109,9 @@ def main():
                        sync_interval=args.sync_interval,
                        sample_on_device=not args.host_sampling,
                        kernel_interpret=args.kernel_interpret)
+    obs = (Observability.off() if args.no_obs else
+           Observability(enabled=True,
+                         trace=TraceRecorder(enabled=bool(args.trace_out))))
     eng = ServeEngine(cfg, fkv, params,
                       max_len=args.context + args.new_tokens + args.page_size
                       + args.prefill_bucket,
@@ -101,7 +120,7 @@ def main():
                       scheduler=args.scheduler,
                       prefill_bucket=args.prefill_bucket,
                       prefix_cache_tokens=args.prefix_cache_tokens,
-                      tp=args.tp)
+                      tp=args.tp, obs=obs)
     n_req = args.requests or args.batch
     stream = needle_stream(cfg.vocab_size, args.context, args.page_size)
     reqs = [Request(uid=i, tokens=next(stream).tokens,
@@ -112,8 +131,23 @@ def main():
         print(f"  prefill {out.prefill_s*1e3:.1f} ms | "
               f"decode {out.decode_s/steps*1e3:.1f} ms/step | "
               f"corr_rate {out.stats.get('correction_rate', 0):.3f}")
-    if eng.last_metrics is not None:
-        print(json.dumps(eng.last_metrics.summary(), indent=2, default=str))
+    em = eng.last_metrics
+    if em is not None:
+        print(json.dumps(em.summary(), indent=2, default=str))
+        if args.metrics_out:
+            em.registry.write_jsonl(args.metrics_out,
+                                    extra={"arch": args.arch,
+                                           "method": args.method,
+                                           "tp": args.tp})
+            print(f"metrics snapshot appended to {args.metrics_out}")
+        if args.prom_out:
+            with open(args.prom_out, "w", encoding="utf-8") as f:
+                f.write(em.registry.to_prometheus())
+            print(f"prometheus exposition written to {args.prom_out}")
+    if args.trace_out and obs.trace.enabled:
+        obs.trace.write(args.trace_out)
+        print(f"trace written to {args.trace_out} "
+              f"({len(obs.trace.events)} events)")
 
 
 if __name__ == "__main__":

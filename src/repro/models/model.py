@@ -663,17 +663,21 @@ def _apply_layer_decode(cfg, fkv, lk, retr, lp, x, pos, st, mesh, q_proxy):
 def _info_stats(info, B):
     if info is None:
         z = jnp.zeros((B,), jnp.float32)
-        return {"corrected": z, "kv_heads": z, "sync_pages": z,
-                "async_pages": z, "reused_pages": z, "sim_sum": z,
-                "sim_cnt": z}
-    reused = info.get("reused_pages", jnp.zeros((B,), jnp.int32))
+        return {k: z for k in DECODE_STAT_KEYS}
+    z = jnp.zeros((B,), jnp.int32)
+    reused = info.get("reused_pages", z)
     return {"corrected": jnp.sum(info["corrected"], 1).astype(jnp.float32),
             "kv_heads": jnp.full((B,), info["corrected"].shape[1], jnp.float32),
             "sync_pages": info["sync_pages"].astype(jnp.float32),
             "async_pages": info["async_pages"].astype(jnp.float32),
             "reused_pages": reused.astype(jnp.float32),
             "sim_sum": jnp.sum(info["similarity"], 1).astype(jnp.float32),
-            "sim_cnt": jnp.full((B,), info["similarity"].shape[1], jnp.float32)}
+            "sim_cnt": jnp.full((B,), info["similarity"].shape[1], jnp.float32),
+            # speculation-quality telemetry (retrievers that don't model
+            # residency report zeros; see docs/observability.md)
+            "sel_pages": info.get("sel_pages", z).astype(jnp.float32),
+            "spec_hit_pages": info.get("spec_hit_pages", z).astype(jnp.float32),
+            "churn_pages": info.get("churn_pages", z).astype(jnp.float32)}
 
 
 def serve_step(cfg: ArchConfig, fkv: FreeKVConfig, params, state, tokens,
@@ -738,9 +742,14 @@ def serve_step(cfg: ArchConfig, fkv: FreeKVConfig, params, state, tokens,
 # host-sync-free decode: fused sampling + k-step-ahead device loop
 # ---------------------------------------------------------------------------
 # canonical per-step retrieval stat keys (the _info_stats contract); the
-# serving scheduler and the decode window's stat blocks share this tuple
+# serving scheduler and the decode window's stat blocks share this tuple.
+# sel/spec_hit/churn are the speculation-quality telemetry: selected page
+# slots, selected pages already resident from the previous speculation, and
+# pages entering the top-k — accumulated on device in the (k, B) stat
+# blocks and pulled only at sync boundaries (repro.obs).
 DECODE_STAT_KEYS = ("corrected", "kv_heads", "sync_pages", "async_pages",
-                    "reused_pages", "sim_sum", "sim_cnt")
+                    "reused_pages", "sim_sum", "sim_cnt", "sel_pages",
+                    "spec_hit_pages", "churn_pages")
 
 
 def serve_step_sampled(cfg: ArchConfig, fkv: FreeKVConfig, params, state,

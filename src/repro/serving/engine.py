@@ -50,8 +50,10 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, FreeKVConfig
 from repro.core.recall_pipeline import RecallFlightTracker
-from repro.models.model import (decode_window, prefill, prefill_extend,
-                                serve_step, supports_kv_extend)
+from repro.models.model import (DECODE_STAT_KEYS, decode_window, prefill,
+                                prefill_extend, serve_step,
+                                supports_kv_extend)
+from repro.obs import Observability
 from repro.serving.kv_slots import SlotPool
 from repro.serving.metrics import EngineMetrics, RequestMetrics
 from repro.serving.prefix_cache import RadixPrefixCache
@@ -89,7 +91,8 @@ class ServeEngine:
                  prefill_bucket: int = 1,
                  prefix_cache_tokens: int = 0,
                  pad_token: int = 0,
-                 tp: int = 1):
+                 tp: int = 1,
+                 obs: Optional[Observability] = None):
         assert scheduler in ("continuous", "static"), scheduler
         if tp > 1:
             # tensor-parallel serving: KV-head-group sharding over a 1-D
@@ -154,6 +157,11 @@ class ServeEngine:
                              else None)
         self._pool: Optional[SlotPool] = None
         self.last_metrics: Optional[EngineMetrics] = None
+        # observability plane (repro.obs): per-step latency/speculation
+        # histograms + Perfetto trace spans, recorded by the scheduler at
+        # sync boundaries only. Default off — the registry-backed counters
+        # in EngineMetrics always run; this gates the extra distributions.
+        self.obs = obs if obs is not None else Observability.off()
         # per-slot in-flight staged recall accounting (core/recall_pipeline);
         # the continuous scheduler feeds it each step and invalidates on
         # slot turnover. Reset per generate() run. Under TP it is fed global
@@ -325,6 +333,8 @@ class ServeEngine:
                                       prefill_s=c.prefill_s,
                                       decode_s=c.decode_s, finish_t=em.wall_s)
                        for r, c in zip(requests, out)]
+        for rm in em.requests:
+            em.record_request(rm)
         self.last_metrics = em
         return out
 
@@ -375,10 +385,7 @@ class ServeEngine:
         # per-request stats: finished rows are masked out of the aggregation
         # (they still ride the lockstep batch — that cost is what the
         # continuous scheduler removes — but they no longer pollute stats)
-        aggs = [{k: 0.0 for k in ("corrected", "kv_heads", "sync_pages",
-                                  "async_pages", "reused_pages", "sim_sum",
-                                  "sim_cnt")}
-                for _ in reqs]
+        aggs = [{k: 0.0 for k in DECODE_STAT_KEYS} for _ in reqs]
         decode_ss = [0.0 for _ in reqs]
         cur = sample(logits, self.sampler, key)
         done = [r.max_new_tokens <= 0 for r in reqs]

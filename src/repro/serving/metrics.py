@@ -4,6 +4,18 @@ All timestamps are ``time.perf_counter()`` values relative to the scheduler
 run's start; derived quantities (queue wait, TTFT, inter-token latency) are
 exposed as properties so callers never recompute them inconsistently.
 
+Since the observability PR, ``EngineMetrics`` is a *view* over a
+per-run :class:`repro.obs.MetricsRegistry` — every accumulator that used
+to be an ad-hoc dataclass field (steps, page counts, host-boundary
+bytes, ...) is a named registry counter/gauge exposed through
+attribute-style properties, so existing callers (scheduler, tests,
+benchmarks) keep reading/writing ``em.steps`` etc. while exporters
+(``launch/serve.py --metrics-out/--prom-out``) get the full registry:
+the same scalars plus TTFT/ITL/queue-wait/decode-step latency histograms
+and the speculation-quality histograms fed from ``decode_window``'s
+device-side stat blocks. Metric names are cataloged in
+docs/observability.md.
+
 ``EngineMetrics.summary()`` is the single dict consumed by
 ``benchmarks/serving_throughput.py`` and the serving launcher.
 """
@@ -11,6 +23,9 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
+
+from repro.obs.registry import (COUNT_BUCKETS, LATENCY_BUCKETS, RATE_BUCKETS,
+                                MetricsRegistry)
 
 
 @dataclass
@@ -54,23 +69,67 @@ def _mean(xs: List[float]) -> float:
     return sum(xs) / len(xs) if xs else 0.0
 
 
+# attribute name -> (registry metric name, cast, help); attached as
+# properties below so ``em.steps += 1`` / ``em.steps = 0`` keep working
+_COUNTER_ATTRS = {
+    "steps": ("engine_steps_total", int,
+              "decode steps executed"),
+    "active_slot_steps": ("engine_active_slot_steps_total", int,
+                          "sum over steps of active slots"),
+    "sync_pages": ("recall_sync_pages_total", float,
+                   "blocking (kv-head, page) blocks on the critical path"),
+    "async_pages": ("recall_async_pages_total", float,
+                    "staged blocks hidden behind compute"),
+    "reused_pages": ("recall_reused_pages_total", float,
+                     "blocks served from the resident double buffer"),
+    "host_syncs": ("dispatch_host_syncs_total", int,
+                   "host bookkeeping boundaries hit"),
+    "sync_bytes_to_host": ("dispatch_sync_bytes_to_host_total", float,
+                           "token/valid/stat blocks pulled at syncs"),
+    "sync_bytes_to_device": ("dispatch_sync_bytes_to_device_total", float,
+                             "loop-lane pushes at syncs"),
+    "nonsync_host_bytes": ("dispatch_nonsync_host_bytes_total", float,
+                           "decode-loop transfers BETWEEN syncs"),
+    "sel_pages": ("spec_sel_pages_total", float,
+                  "speculatively selected (kv-head, page) slots"),
+    "spec_hit_pages": ("spec_hit_pages_total", float,
+                       "selected pages already resident from the previous "
+                       "step's speculation"),
+    "churn_pages": ("spec_churn_pages_total", float,
+                    "pages entering the top-k selection this step"),
+    "corrected_heads": ("spec_corrected_heads_total", float,
+                        "kv heads that triggered fine-grained correction"),
+    "kv_head_steps": ("spec_kv_head_steps_total", float,
+                      "kv-head decision opportunities (heads x steps)"),
+}
+_GAUGE_ATTRS = {
+    "dropped_pages": ("recall_dropped_in_flight_pages", float,
+                      "staged blocks abandoned at slot turnover"),
+    "wall_s": ("engine_wall_seconds", float, "scheduler run wall clock"),
+}
+
+# histogram metric names (buckets fixed at first touch)
+H_QUEUE_WAIT = "request_queue_wait_seconds"
+H_TTFT = "request_ttft_seconds"
+H_ITL = "request_itl_seconds"
+H_PREFILL = "request_prefill_seconds"
+H_DECODE_STEP = "engine_decode_step_seconds"
+H_HIT_RATE = "spec_hit_rate"
+H_CORRECTION_RATE = "spec_correction_rate"
+H_CHURN = "spec_churn_pages"
+
+
 @dataclass
 class EngineMetrics:
-    """Engine-level aggregation across one scheduler run."""
+    """Engine-level aggregation across one scheduler run.
+
+    Scalar accumulators live in ``registry`` (see module docstring);
+    the dataclass fields below are run *configuration* and derived-state
+    inputs that don't stream.
+    """
     num_slots: int = 0
     requests: List[RequestMetrics] = field(default_factory=list)
-    steps: int = 0
-    active_slot_steps: int = 0        # sum over steps of active slots
-    wall_s: float = 0.0
-    # retrieval traffic (counts of (kv-head, page) blocks; see core/retrieval
-    # and core/recall_pipeline): sync = blocking/exposed on the decode
-    # critical path, async = staged/hidden behind compute, reused = served
-    # from the resident double buffer (no transfer), dropped = staged
-    # in-flight when the slot turned over (wasted transfer)
-    sync_pages: float = 0.0
-    async_pages: float = 0.0
-    reused_pages: float = 0.0
-    dropped_pages: float = 0.0
+    registry: MetricsRegistry = field(default_factory=MetricsRegistry)
     page_block_bytes: int = 0         # bytes of one (kv-head, page) K+V block
     # quantized host KV tier (src/repro/quant): with kv_quant != "none",
     # page_block_bytes is the *packed* transfer unit (payload + fp32 scales)
@@ -85,8 +144,8 @@ class EngineMetrics:
     transfer_is_dma: bool = False
     prefix_cache: Dict = field(default_factory=dict)
     scheduler: str = "continuous"
-    # tensor-parallel serving: page counts above are GLOBAL (psum'ed across
-    # the KV-head-group shards); each shard moves 1/tp of them over its own
+    # tensor-parallel serving: page counts are GLOBAL (psum'ed across the
+    # KV-head-group shards); each shard moves 1/tp of them over its own
     # host link — see summary()["tp"] for the per-shard view
     tp: int = 1
     # host-sync-free decode loop (models.decode_window): the scheduler
@@ -98,15 +157,54 @@ class EngineMetrics:
     # reference path (sample_on_device=False) syncs every step.
     sync_interval: int = 1
     sample_on_device: bool = True
-    host_syncs: int = 0               # host bookkeeping boundaries hit
-    sync_bytes_to_host: float = 0.0   # token/valid/stat blocks pulled at syncs
-    sync_bytes_to_device: float = 0.0  # loop-lane pushes at syncs
-    nonsync_host_bytes: float = 0.0   # decode-loop transfers BETWEEN syncs
 
+    # -- recording helpers ----------------------------------------------
     def record_step(self, n_active: int):
         self.steps += 1
         self.active_slot_steps += n_active
 
+    def observe_decode_step(self, dt_s: float):
+        self.registry.histogram(H_DECODE_STEP, LATENCY_BUCKETS,
+                                "per-step decode latency").observe(dt_s)
+
+    def observe_speculation(self, sel: float, hit: float, churn: float,
+                            corrected: float, kv_heads: float):
+        """One slot-step of speculation-quality histograms: values come
+        from ``decode_window``'s device-side stat blocks, pulled at the
+        sync boundary — recording them here adds no host traffic. (The
+        matching run totals accumulate via the ``sel_pages``/... counter
+        attributes, fed by the scheduler for every run, obs on or off.)"""
+        reg = self.registry
+        if sel > 0:
+            reg.histogram(H_HIT_RATE, RATE_BUCKETS,
+                          "per-step speculative page-hit rate").observe(
+                              hit / sel)
+            reg.histogram(H_CHURN, COUNT_BUCKETS,
+                          "pages entering top-k per step").observe(churn)
+        if kv_heads > 0:
+            reg.histogram(H_CORRECTION_RATE, RATE_BUCKETS,
+                          "per-step corrected-head fraction").observe(
+                              corrected / kv_heads)
+
+    def record_request(self, rm: RequestMetrics):
+        """Observe a finished request's latency distributions."""
+        reg = self.registry
+        reg.counter("requests_completed_total").inc()
+        reg.counter("request_tokens_generated_total").inc(rm.new_tokens)
+        if rm.queue_wait_s is not None:
+            reg.histogram(H_QUEUE_WAIT, LATENCY_BUCKETS,
+                          "enqueue -> prefill start").observe(rm.queue_wait_s)
+        if rm.ttft_s is not None:
+            reg.histogram(H_TTFT, LATENCY_BUCKETS,
+                          "enqueue -> first token").observe(rm.ttft_s)
+        if rm.itl_s is not None:
+            reg.histogram(H_ITL, LATENCY_BUCKETS,
+                          "mean inter-token latency").observe(rm.itl_s)
+        if rm.prefill_s > 0:
+            reg.histogram(H_PREFILL, LATENCY_BUCKETS,
+                          "prefill forward time").observe(rm.prefill_s)
+
+    # -- derived views ---------------------------------------------------
     @property
     def slot_occupancy(self) -> float:
         total = self.steps * self.num_slots
@@ -201,6 +299,21 @@ class EngineMetrics:
         moved = self.hidden_transfer_bytes + self.exposed_transfer_bytes
         return self.hidden_transfer_bytes / moved if moved else 0.0
 
+    @property
+    def spec_hit_rate_mean(self) -> float:
+        """Run-level speculative hit rate: fraction of selected pages the
+        previous step's speculation already made resident."""
+        return self.spec_hit_pages / self.sel_pages if self.sel_pages else 0.0
+
+    @property
+    def correction_rate_mean(self) -> float:
+        """Run-level corrected-head fraction (the paper's accuracy dial)."""
+        return (self.corrected_heads / self.kv_head_steps
+                if self.kv_head_steps else 0.0)
+
+    def _hist_summary(self, name: str, buckets) -> dict:
+        return self.registry.histogram(name, buckets).summary()
+
     def summary(self) -> dict:
         done = [r for r in self.requests if r.finish_t is not None]
         return {
@@ -218,8 +331,28 @@ class EngineMetrics:
                                   if r.ttft_s is not None]),
             "itl_s_mean": _mean([r.itl_s for r in done
                                  if r.itl_s is not None]),
-            "recall_bytes_sync": self.recall_bytes["sync"],
-            "recall_bytes_async": self.recall_bytes["async"],
+            "latency": {
+                "queue_wait_s": self._hist_summary(H_QUEUE_WAIT,
+                                                   LATENCY_BUCKETS),
+                "ttft_s": self._hist_summary(H_TTFT, LATENCY_BUCKETS),
+                "itl_s": self._hist_summary(H_ITL, LATENCY_BUCKETS),
+                "decode_step_s": self._hist_summary(H_DECODE_STEP,
+                                                    LATENCY_BUCKETS),
+            },
+            "speculation": {
+                "sel_pages": self.sel_pages,
+                "spec_hit_pages": self.spec_hit_pages,
+                "churn_pages": self.churn_pages,
+                "hit_rate_mean": self.spec_hit_rate_mean,
+                "correction_rate_mean": self.correction_rate_mean,
+                "hit_rate": self._hist_summary(H_HIT_RATE, RATE_BUCKETS),
+                "correction_rate": self._hist_summary(H_CORRECTION_RATE,
+                                                      RATE_BUCKETS),
+                "churn": self._hist_summary(H_CHURN, COUNT_BUCKETS),
+            },
+            # canonical byte accounting: recall_overlap (the old top-level
+            # recall_bytes_sync/async duplicates were removed — readers use
+            # exposed_bytes/hidden_bytes here)
             "recall_overlap": {
                 "hidden_bytes": self.hidden_transfer_bytes,
                 "exposed_bytes": self.exposed_transfer_bytes,
@@ -259,3 +392,25 @@ class EngineMetrics:
             },
             "prefix_cache": dict(self.prefix_cache),
         }
+
+
+def _attach_registry_attrs():
+    """Expose registry counters/gauges as read/write EngineMetrics
+    attributes so the scheduler's ``em.steps += 1`` bookkeeping and every
+    existing reader keep working unchanged."""
+    def make(metric, cast, help, kind):
+        def fget(self):
+            m = getattr(self.registry, kind)(metric, help)
+            return cast(m.value)
+
+        def fset(self, v):
+            getattr(self.registry, kind)(metric, help).set(float(v))
+        return property(fget, fset)
+
+    for attr, (metric, cast, help) in _COUNTER_ATTRS.items():
+        setattr(EngineMetrics, attr, make(metric, cast, help, "counter"))
+    for attr, (metric, cast, help) in _GAUGE_ATTRS.items():
+        setattr(EngineMetrics, attr, make(metric, cast, help, "gauge"))
+
+
+_attach_registry_attrs()

@@ -49,8 +49,15 @@ import numpy as np
 
 from repro.core.recall_pipeline import RecallFlightTracker
 from repro.models.model import DECODE_STAT_KEYS as _STAT_KEYS
+from repro.obs import Observability
+from repro.obs.trace import SPAN_DECODE_STEP, SPAN_DECODE_WINDOW
 from repro.serving.metrics import EngineMetrics, RequestMetrics
 from repro.serving.sampling import request_key
+
+# stat keys the engine-level counters accumulate (a subset of _STAT_KEYS;
+# per-request aggregation keeps the full tuple)
+_PAGE_KEYS = ("sync_pages", "async_pages", "reused_pages", "sel_pages",
+              "spec_hit_pages", "churn_pages")
 
 # request lifecycle states
 QUEUED, PREFILL, DECODE, DONE = "queued", "prefill", "decode", "done"
@@ -82,6 +89,8 @@ def _request_stats(agg: Dict[str, float]) -> dict:
         stats["correction_rate"] = agg["corrected"] / agg["kv_heads"]
         stats["mean_similarity"] = (agg["sim_sum"] / agg["sim_cnt"]
                                     if agg["sim_cnt"] else 0.0)
+    if agg.get("sel_pages", 0) > 0:
+        stats["spec_hit_rate"] = agg["spec_hit_pages"] / agg["sel_pages"]
     return stats
 
 
@@ -147,7 +156,11 @@ class ContinuousScheduler:
         backend, pool = self.backend, self.pool
         on_device = (bool(getattr(backend, "sample_on_device", False))
                      and hasattr(backend, "decode_window"))
+        obs = getattr(backend, "obs", None) or Observability.off()
+        self._obs, self._trace = obs, obs.trace
+        self._page_block_bytes = backend.page_block_bytes
         t0 = time.perf_counter()
+        self._t0 = t0
         now = lambda: time.perf_counter() - t0  # noqa: E731
 
         queue: deque = deque()
@@ -179,23 +192,41 @@ class ContinuousScheduler:
             tr.metrics.new_tokens = len(tr.tokens)
             tr.metrics.prefill_s = tr.prefill_s
             tr.metrics.decode_s = tr.decode_s
+            em.record_request(tr.metrics)       # latency histograms
+            self._trace.request_lifecycle(tr.metrics)
             done.append(tr)
             if slot is not None:
                 flight.invalidate(slot)   # staged buffer abandoned in flight
                 pool.free(slot)
                 lanes.retire(slot)
 
-        def apply_step(stats_np, toks_np, live_slots, dt):
+        def apply_step(stats_np, toks_np, live_slots, dt, ts=None):
             """Host bookkeeping for ONE decode step: telemetry, token
-            append, finish detection. Shared by both dispatch modes."""
+            append, finish detection. Shared by both dispatch modes.
+            ``ts`` (run-relative seconds) anchors the step's trace spans;
+            everything recorded here came out of the sync-boundary stat
+            pull — no extra host traffic."""
             em.record_step(len(live_slots))
-            for k in ("sync_pages", "async_pages", "reused_pages"):
+            for k in _PAGE_KEYS + ("corrected_heads", "kv_head_steps"):
+                src = {"corrected_heads": "corrected",
+                       "kv_head_steps": "kv_heads"}.get(k, k)
                 setattr(em, k, getattr(em, k)
-                        + float(sum(stats_np[k][s] for s in live_slots)))
+                        + float(sum(stats_np[src][s] for s in live_slots)))
             for s in live_slots:
                 flight.note_step(s, float(stats_np["async_pages"][s]),
                                  float(stats_np["sync_pages"][s]),
                                  float(stats_np["reused_pages"][s]))
+            if obs.enabled:
+                em.observe_decode_step(dt)
+                for s in live_slots:
+                    em.observe_speculation(
+                        float(stats_np["sel_pages"][s]),
+                        float(stats_np["spec_hit_pages"][s]),
+                        float(stats_np["churn_pages"][s]),
+                        float(stats_np["corrected"][s]),
+                        float(stats_np["kv_heads"][s]))
+            if ts is not None and self._trace.enabled:
+                self._trace_step(stats_np, live_slots, ts, dt)
             for s in live_slots:
                 tr = active[s]
                 tr.decode_s += dt
@@ -260,12 +291,37 @@ class ContinuousScheduler:
     # ------------------------------------------------------------------
     # decode dispatch modes
     # ------------------------------------------------------------------
+    def _trace_step(self, stats_np, live_slots, ts, dt):
+        """One decode step's trace spans (run-relative ts/dt seconds):
+        the step itself on the decode track, the recall-stage split
+        (blocking top-up vs overlapped stage) via TraceRecorder, and the
+        speculation counter track."""
+        tr = self._trace
+        agg = {k: float(sum(stats_np[k][s] for s in live_slots))
+               for k in ("sync_pages", "async_pages", "reused_pages",
+                         "sel_pages", "spec_hit_pages", "corrected",
+                         "kv_heads")}
+        tr.complete(SPAN_DECODE_STEP, ts, dt,
+                    args={"live_slots": len(live_slots),
+                          "sync_pages": agg["sync_pages"],
+                          "async_pages": agg["async_pages"]})
+        tr.recall_step(ts, dt, sync_pages=agg["sync_pages"],
+                       async_pages=agg["async_pages"],
+                       reused_pages=agg["reused_pages"],
+                       page_block_bytes=self._page_block_bytes)
+        tr.counter("speculation", ts, {
+            "hit_rate": (agg["spec_hit_pages"] / agg["sel_pages"]
+                         if agg["sel_pages"] else 0.0),
+            "correction_rate": (agg["corrected"] / agg["kv_heads"]
+                                if agg["kv_heads"] else 0.0)})
+
     def _window_steps(self, backend, pool, em, lanes, apply_step,
                       stop_turnover: bool):
         """Host-sync-free mode: dispatch up to sync_interval fused steps,
         then sync once — pull the token/valid/stat blocks, apply them."""
         loop = lanes.device_loop(stop_turnover, em)
         ts = time.perf_counter()
+        ts_rel = ts - self._t0
         state, loop, toks, valid, stats, n = backend.decode_window(
             pool.state, loop)
         pool.state = state
@@ -273,22 +329,28 @@ class ContinuousScheduler:
         n = int(n)                                  # the one host sync
         toks_np = np.asarray(toks)
         valid_np = np.asarray(valid)
-        stats_np = {k: np.asarray(stats[k]) for k in _STAT_KEYS}
+        stats_np = {k: (np.asarray(stats[k]) if k in stats
+                        else np.zeros(toks_np.shape, np.float32))
+                    for k in _STAT_KEYS}
         dt = time.perf_counter() - ts
         em.host_syncs += 1
-        em.sync_bytes_to_host += (4 + toks_np.nbytes + valid_np.nbytes
-                                  + sum(v.nbytes for v in stats_np.values()))
+        pulled = (4 + toks_np.nbytes + valid_np.nbytes
+                  + sum(v.nbytes for v in stats_np.values()))
+        em.sync_bytes_to_host += pulled
+        self._trace.complete(SPAN_DECODE_WINDOW, ts_rel, dt,
+                             args={"steps": n, "bytes_to_host": pulled})
         per_dt = dt / max(n, 1)
         for j in range(n):
             live = [s for s in np.nonzero(valid_np[j])[0]]
             apply_step({k: stats_np[k][j] for k in _STAT_KEYS},
-                       toks_np[j], live, per_dt)
+                       toks_np[j], live, per_dt, ts=ts_rel + j * per_dt)
 
     def _sync_step(self, backend, pool, em, lanes, apply_step):
         """Synchronous reference mode: one decode step, one host sync —
         tokens sampled outside the jitted step, stats pulled every step."""
         loop = lanes.device_loop(False, em)
         ts = time.perf_counter()
+        ts_rel = ts - self._t0
         logits, state, stats = backend.step(pool.state, loop["cur"][:, None])
         toks = backend.sample_lanes(logits, loop["key"], loop["count"])
         toks_np = np.asarray(toks)
@@ -305,4 +367,4 @@ class ContinuousScheduler:
         # host-sync-free loop exists to remove
         lanes.dirty = True
         apply_step(stats_np, toks_np, [s for s in np.nonzero(~lanes.fin)[0]],
-                   dt)
+                   dt, ts=ts_rel)

@@ -154,8 +154,10 @@ def test_tp2_bit_identical_mixed_traffic(tp_report, overlap, quant):
     assert r["tp1_tokens"] == r["tp2_tokens"], \
         "tp=2 greedy outputs diverged from tp=1"
     # global transfer counters are exact integers -> must match across tp
-    for k in ("recall_bytes_sync", "recall_bytes_async"):
-        assert r["tp1_summary"][k] == r["tp2_summary"][k], k
+    # (canonical location: summary()["recall_overlap"])
+    for k in ("exposed_bytes", "hidden_bytes"):
+        assert (r["tp1_summary"]["recall_overlap"][k]
+                == r["tp2_summary"]["recall_overlap"][k]), k
     assert r["tp2_summary"]["tp"]["tp"] == 2
 
 

@@ -20,7 +20,8 @@ A metric whose baseline is 0 on a percent-scaled axis (e.g. ``acc_drop``)
 is gated absolutely: the new value may not exceed the tolerance itself.
 
     PYTHONPATH=src python tools/check_bench.py [--tolerance 0.25]
-        [--sections breakdown ablation quant_quality sharded] [--list]
+        [--sections breakdown ablation quant_quality dispatch sharded
+         serving obs] [--list]
 
 Exit status 0 = no regressions; 1 = regression or missing/failed re-run.
 Sections without a committed baseline are skipped with a warning
@@ -44,6 +45,9 @@ COMMANDS = {
                 "--smoke"],
     "dispatch": [sys.executable, "benchmarks/dispatch_overhead.py",
                  "--smoke"],
+    "serving": [sys.executable, "benchmarks/serving_throughput.py",
+                "--smoke"],
+    "obs": [sys.executable, "benchmarks/obs_overhead.py", "--smoke"],
 }
 
 # (path-into-metrics, direction); direction: "lower" | "higher" | "true"
@@ -89,6 +93,35 @@ GATES = {
             (("dispatch", "nonsync_bytes_per_step"), "lower"),
             (("dispatch", "steps_per_sync"), "higher"),
             (("dispatch", "sync_reduction"), "higher"),
+        ],
+    },
+    "serving": {
+        "cmd": "serving",
+        "metrics": [
+            # continuous batching must beat static chunking and the prefix
+            # cache must cut warm TTFT >= 30% — both within-run ratios.
+            # ttft_p90_s / itl_p90_s are recorded, never gated (wall clock).
+            (("throughput_pass",), "true"),
+            (("ttft_pass",), "true"),
+            (("throughput_speedup",), "higher"),
+            (("ttft_reduction",), "higher"),
+            (("slot_occupancy",), "higher"),
+        ],
+    },
+    "obs": {
+        "cmd": "obs",
+        "metrics": [
+            # full observability (histograms + trace) must not change the
+            # math (bit_identical), add host syncs, or move bytes between
+            # sync points; exported trace/snapshot must stay well-formed.
+            # overhead_frac / tokens_per_s are recorded, never gated
+            # (wall clock) — overhead_ok enforces the <= 5% budget.
+            (("bit_identical",), "true"),
+            (("overhead_ok",), "true"),
+            (("host_syncs_equal",), "true"),
+            (("nonsync_bytes_per_step",), "lower"),
+            (("trace_valid",), "true"),
+            (("snapshot_valid",), "true"),
         ],
     },
     "sharded": {

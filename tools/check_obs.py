@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Validate observability exporter artifacts against their schemas.
+
+Checks (exit 1 on any problem; paths default to the CI smoke artifacts):
+
+* ``--metrics PATH`` — a JSONL file of ``MetricsRegistry.snapshot_line()``
+  dicts: every line must parse as JSON and pass
+  :func:`repro.obs.validate_snapshot` (schema_version, section shapes,
+  histogram bucket invariants).
+* ``--trace PATH`` — a Chrome-trace JSON: must parse and pass
+  :func:`repro.obs.validate_chrome_trace` (the same well-formedness
+  Perfetto's loader needs: traceEvents list, ph/pid/name per event,
+  non-negative durations on complete events).
+* ``--prom PATH`` — a Prometheus text exposition: every non-comment line
+  must be ``name[{labels}] value`` with a finite numeric value, and every
+  ``# TYPE`` must be counter/gauge/histogram.
+
+    PYTHONPATH=src python tools/check_obs.py --metrics m.jsonl \
+        --trace t.json [--prom m.prom]
+
+The exporter formats are documented in docs/observability.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.obs import validate_chrome_trace, validate_snapshot  # noqa: E402
+
+
+def check_metrics_jsonl(path: str) -> list:
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        lines = [ln for ln in f if ln.strip()]
+    if not lines:
+        return [f"{path}: empty"]
+    for i, ln in enumerate(lines, 1):
+        try:
+            snap = json.loads(ln)
+        except json.JSONDecodeError as e:
+            errors.append(f"{path}:{i}: invalid JSON ({e})")
+            continue
+        errors.extend(f"{path}:{i}: {e}" for e in validate_snapshot(snap))
+    return errors
+
+
+def check_trace(path: str) -> list:
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        return [f"{path}: unreadable ({e})"]
+    return [f"{path}: {e}" for e in validate_chrome_trace(doc)]
+
+
+def check_prometheus(path: str) -> list:
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        lines = f.read().splitlines()
+    if not lines:
+        return [f"{path}: empty"]
+    for i, ln in enumerate(lines, 1):
+        if not ln.strip():
+            continue
+        if ln.startswith("# TYPE "):
+            kind = ln.split()[-1]
+            if kind not in ("counter", "gauge", "histogram"):
+                errors.append(f"{path}:{i}: unknown metric type {kind!r}")
+            continue
+        if ln.startswith("#"):
+            continue
+        parts = ln.rsplit(" ", 1)
+        if len(parts) != 2:
+            errors.append(f"{path}:{i}: not 'name value'")
+            continue
+        try:
+            v = float(parts[1])
+        except ValueError:
+            errors.append(f"{path}:{i}: non-numeric value {parts[1]!r}")
+            continue
+        if not math.isfinite(v) and "+Inf" not in parts[1]:
+            errors.append(f"{path}:{i}: non-finite value")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--metrics", default=None,
+                    help="JSONL metrics-registry snapshot file")
+    ap.add_argument("--trace", default=None,
+                    help="Chrome-trace/Perfetto JSON file")
+    ap.add_argument("--prom", default=None,
+                    help="Prometheus text exposition file")
+    args = ap.parse_args()
+    if not (args.metrics or args.trace or args.prom):
+        ap.error("nothing to check: pass --metrics / --trace / --prom")
+
+    errors = []
+    for path, fn, label in ((args.metrics, check_metrics_jsonl, "metrics"),
+                            (args.trace, check_trace, "trace"),
+                            (args.prom, check_prometheus, "prometheus")):
+        if path is None:
+            continue
+        if not os.path.exists(path):
+            errors.append(f"{label}: {path} does not exist")
+            continue
+        errs = fn(path)
+        errors.extend(errs)
+        print(f"{label}: {path} — "
+              f"{'OK' if not errs else f'{len(errs)} problem(s)'}")
+    for e in errors:
+        print(f"  {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
