@@ -241,6 +241,28 @@ class FreeKVConfig:
     # either way (and sampled outputs too: both paths share the per-slot
     # fold_in(key_uid, token_index) streams).
     sample_on_device: bool = True
+    # Chunked prefill (serving/scheduler + engine.PrefillJob): admission no
+    # longer runs a whole prompt's prefill inline — the prompt is split into
+    # chunks of at most ``prefill_chunk_tokens`` tokens, each executed as a
+    # ``model.prefill_extend`` continuation of the chunks before it, and the
+    # scheduler interleaves one chunk budget per decode window so co-batched
+    # decoders stall for at most one chunk's compute instead of the whole
+    # prefill. The final chunk builds the paged decode state from the full
+    # concatenated K/V — the same math as the prefix-cache extension path —
+    # so greedy outputs are bit-identical to whole-shot prefill. 0 = off
+    # (whole-shot at admission, the previous behavior). Requires an
+    # attention-only stack (``model.supports_kv_extend``); other configs
+    # silently fall back to whole-shot.
+    prefill_chunk_tokens: int = 0
+    # Priority-aware preemption (serving/scheduler + SlotPool.swap_out/in):
+    # when the pool is full and a queued request's priority strictly exceeds
+    # the lowest-priority running request's, the victim's entire paged KV —
+    # pool pages (packed int8/int4 under kv_quant), quant scales, sink and
+    # window rings, selection buffers, summaries — is swapped to host memory
+    # and the slot is handed over; the victim resumes later via an exact
+    # round-trip of the packed representation, so its remaining tokens are
+    # bit-identical to an uninterrupted run. False = never preempt.
+    preempt: bool = False
     # Pallas kernel execution mode: "auto" = compiled on TPU, interpret
     # elsewhere (the CPU backend cannot lower Mosaic); "interpret" /
     # "compiled" force it (kernels/ops.resolve_interpret).

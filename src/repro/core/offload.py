@@ -25,6 +25,7 @@ Usage:
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from repro.configs.base import FreeKVConfig
 
@@ -120,6 +121,21 @@ def pool_on_host(state) -> bool:
 
     jax.tree_util.tree_map_with_path(check, state)
     return found
+
+
+def swap_state_to_host(state):
+    """Pull an extracted (B=1) decode state fully to host numpy — the
+    serving preemption swap-out tier.
+
+    Unlike ``place_decode_state`` (which keeps pool leaves device-addressable
+    in pinned host memory for DMA recall), a swapped-out victim's state
+    leaves the device entirely: every leaf — packed int8/int4 pool payload,
+    fp32 quant scales, sink/window rings, selection buffers, summaries,
+    ``pos`` — is materialized as a host numpy array at its stored dtype, so
+    the round trip back through ``SlotPool.swap_in`` is exact (bit-identical
+    for fp leaves, the identical packed representation for quantized pools).
+    """
+    return jax.tree.map(np.asarray, jax.device_get(state))
 
 
 def pool_bytes(state) -> int:

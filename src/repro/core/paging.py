@@ -65,6 +65,14 @@ def quant_info(state):
     return bits, d // state["pool_scale"].shape[-1]
 
 
+def state_bytes(state) -> int:
+    """Physical bytes of every leaf of a decode state (packed int8/int4 pool
+    payload at its packed width, fp32 scales included) — the unit the serving
+    preemption swap accounts, since a swap round-trips the state verbatim."""
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(state)
+               if hasattr(leaf, "nbytes"))
+
+
 def init_kv_state(cfg: ArchConfig, fkv: FreeKVConfig, batch: int, max_len: int,
                   dtype=jnp.bfloat16):
     """Per-layer FreeKV decode state."""

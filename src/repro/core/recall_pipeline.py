@@ -209,6 +209,20 @@ class RecallFlightTracker:
         """Slot turnover: the staged buffer is abandoned mid-flight."""
         self.dropped_pages += self._in_flight.pop(slot, 0.0)
 
+    def suspend(self, slot: int) -> float:
+        """Preemption swap-out: the slot's staged buffer lives in the
+        ``sel_k/sel_v`` leaves and round-trips through host memory with the
+        rest of the state, so the in-flight pages travel WITH the request
+        instead of being dropped. Returns the suspended count for
+        ``restore`` at swap-in."""
+        return self._in_flight.pop(slot, 0.0)
+
+    def restore(self, slot: int, staged: float):
+        """Preemption swap-in: reattach a ``suspend``ed in-flight count to
+        the (possibly different) slot the request resumed into."""
+        if staged:
+            self._in_flight[slot] = staged
+
     def in_flight(self, slot: int) -> Optional[float]:
         return self._in_flight.get(slot)
 

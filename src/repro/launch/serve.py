@@ -53,6 +53,14 @@ def main():
                     default="continuous")
     ap.add_argument("--prefill-bucket", type=int, default=64)
     ap.add_argument("--prefix-cache-tokens", type=int, default=0)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: at most N prompt tokens per "
+                         "scheduler round, interleaved with decode windows "
+                         "(0 = whole-shot; greedy outputs bit-identical)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="priority preemption: swap the lowest-priority "
+                         "running request's KV to host when a strictly "
+                         "higher-priority request waits for a slot")
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable the overlapped recall pipeline (use the "
                          "synchronous blocking-recall reference path)")
@@ -108,6 +116,8 @@ def main():
                        quant_group_size=args.quant_group_size,
                        sync_interval=args.sync_interval,
                        sample_on_device=not args.host_sampling,
+                       prefill_chunk_tokens=args.prefill_chunk,
+                       preempt=args.preempt,
                        kernel_interpret=args.kernel_interpret)
     obs = (Observability.off() if args.no_obs else
            Observability(enabled=True,

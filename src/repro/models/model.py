@@ -486,13 +486,18 @@ def _prefill_layer_state(cfg, fkv, lk, retr, extras, max_len, dtype, enc=None):
 
 
 def prefill(cfg: ArchConfig, fkv: FreeKVConfig, params, batch, max_len: int,
-            mesh=None, state_dtype=jnp.bfloat16, return_kv=False):
+            mesh=None, state_dtype=jnp.bfloat16, return_kv=False,
+            build_state: bool = True):
     """Returns (last-position logits (B, vocab), decode state).
 
     With ``return_kv`` also returns the per-layer post-RoPE K/V of the prompt
     ({"prelude": ((k, v) | None, ...), "pattern": ((k, v) stacked over
     periods, ...)}) for the serving prefix cache; non-attention mixers yield
-    None entries."""
+    None entries. ``build_state=False`` skips the retriever state build and
+    returns ``state=None`` — the chunked-prefill opening chunk uses it (with
+    ``return_kv``) when more chunks follow: its state would be rebuilt from
+    the accumulated K/V at the final chunk anyway, and tiny opening chunks
+    need not satisfy the paged-state layout's minimum prompt span."""
     x, positions, n_front = _embed_inputs(cfg, params, batch)
     enc_x = _encode(cfg, params, batch["frontend"]) if cfg.is_encoder_decoder \
         else None
@@ -506,8 +511,9 @@ def prefill(cfg: ArchConfig, fkv: FreeKVConfig, params, batch, max_len: int,
     for lp, lk, r in zip(params["prelude"], cfg.prelude, pre_r):
         enc = _enc_kv(cfg, lp, enc_x) if enc_x is not None else None
         x, _, ex = _apply_layer_seq(cfg, lk, lp, x, positions, cmesh, enc)
-        pre_states.append(
-            _prefill_layer_state(cfg, fkv, lk, r, ex, max_len, state_dtype, enc))
+        if build_state:
+            pre_states.append(_prefill_layer_state(
+                cfg, fkv, lk, r, ex, max_len, state_dtype, enc))
         pre_kv.append(_kv_of(lk, ex))
 
     def scan_body(x, lps):
@@ -516,8 +522,9 @@ def prefill(cfg: ArchConfig, fkv: FreeKVConfig, params, batch, max_len: int,
             lp = lps[pos_i]
             enc = _enc_kv(cfg, lp, enc_x) if enc_x is not None else None
             x, _, ex = _apply_layer_seq(cfg, lk, lp, x, positions, cmesh, enc)
-            sts.append(_prefill_layer_state(cfg, fkv, lk, pat_r[pos_i], ex,
-                                            max_len, state_dtype, enc))
+            if build_state:
+                sts.append(_prefill_layer_state(cfg, fkv, lk, pat_r[pos_i],
+                                                ex, max_len, state_dtype, enc))
             kvs.append(_kv_of(lk, ex) if return_kv else None)
         return x, (tuple(sts), tuple(kvs))
 
@@ -525,8 +532,9 @@ def prefill(cfg: ArchConfig, fkv: FreeKVConfig, params, batch, max_len: int,
     x = L.apply_norm(cfg, params["final_norm"], x)
     logits = L.lm_logits(cfg, params["embed"], x[:, -1])
     B, T = x.shape[:2]
-    state = {"prelude": tuple(pre_states), "pattern": pat_states,
-             "pos": jnp.full((B,), T, jnp.int32)}
+    state = None if not build_state else {
+        "prelude": tuple(pre_states), "pattern": pat_states,
+        "pos": jnp.full((B,), T, jnp.int32)}
     if return_kv:
         return logits, state, {"prelude": tuple(pre_kv), "pattern": pat_kv}
     return logits, state
@@ -565,7 +573,7 @@ def _apply_layer_extend(cfg, lk, lp, x, q_pos, kv_pos, pk, pv, mesh):
 
 def prefill_extend(cfg: ArchConfig, fkv: FreeKVConfig, params, batch,
                    prefix_kv, max_len: int, mesh=None,
-                   state_dtype=jnp.bfloat16):
+                   state_dtype=jnp.bfloat16, build_state: bool = True):
     """Prefill ``batch["tokens"]`` (B, S) as the continuation of a cached
     prefix whose per-layer post-RoPE K/V is ``prefix_kv`` ({"prelude":
     ((k, v), ...) with k (B, Tp, kv, dh), "pattern": ((k, v) stacked
@@ -576,6 +584,11 @@ def prefill_extend(cfg: ArchConfig, fkv: FreeKVConfig, params, batch,
     rebuilt from the concatenated K/V via each retriever's ``prefill``.
     Returns (logits, state, suffix_kv) where suffix_kv mirrors prefix_kv's
     structure with T=S (for prefix-cache insertion of the full prompt).
+
+    ``build_state=False`` skips the retriever state rebuild and returns
+    ``state=None`` — the chunked-prefill path uses it for every chunk except
+    the last, where rebuilding pages/rings from the growing concatenated K/V
+    would be O(chunks x tokens) work that is discarded at the next chunk.
     """
     assert supports_kv_extend(cfg), \
         f"{cfg.name}: prefix-cache extension requires an attention-only stack"
@@ -596,8 +609,9 @@ def prefill_extend(cfg: ArchConfig, fkv: FreeKVConfig, params, batch,
                               prefix_kv["prelude"]):
         x, ex = _apply_layer_extend(cfg, lk, lp, x, q_pos, kv_pos,
                                     pkv[0], pkv[1], cmesh)
-        st = r.init_state(B, max_len, state_dtype)
-        pre_states.append(r.prefill(st, ex["k"], ex["v"], ex["q_last"]))
+        if build_state:
+            st = r.init_state(B, max_len, state_dtype)
+            pre_states.append(r.prefill(st, ex["k"], ex["v"], ex["q_last"]))
         pre_kv.append((ex["k_new"], ex["v_new"]))
 
     def scan_body(x, xs):
@@ -606,8 +620,10 @@ def prefill_extend(cfg: ArchConfig, fkv: FreeKVConfig, params, batch,
         for pos_i, lk in enumerate(cfg.pattern):
             x, ex = _apply_layer_extend(cfg, lk, lps[pos_i], x, q_pos, kv_pos,
                                         pkvs[pos_i][0], pkvs[pos_i][1], cmesh)
-            st = pat_r[pos_i].init_state(B, max_len, state_dtype)
-            sts.append(pat_r[pos_i].prefill(st, ex["k"], ex["v"], ex["q_last"]))
+            if build_state:
+                st = pat_r[pos_i].init_state(B, max_len, state_dtype)
+                sts.append(pat_r[pos_i].prefill(st, ex["k"], ex["v"],
+                                                ex["q_last"]))
             kvs.append((ex["k_new"], ex["v_new"]))
         return x, (tuple(sts), tuple(kvs))
 
@@ -615,8 +631,9 @@ def prefill_extend(cfg: ArchConfig, fkv: FreeKVConfig, params, batch,
         scan_body, x, (params["pattern"], prefix_kv["pattern"]))
     x = L.apply_norm(cfg, params["final_norm"], x)
     logits = L.lm_logits(cfg, params["embed"], x[:, -1])
-    state = {"prelude": tuple(pre_states), "pattern": pat_states,
-             "pos": jnp.full((B,), Tp + S, jnp.int32)}
+    state = None if not build_state else {
+        "prelude": tuple(pre_states), "pattern": pat_states,
+        "pos": jnp.full((B,), Tp + S, jnp.int32)}
     return logits, state, {"prelude": tuple(pre_kv), "pattern": pat_kv}
 
 

@@ -47,6 +47,9 @@ SPAN_REQUEST_DECODE = "request/decode"
 SPAN_REQUEST_DONE = "request/done"
 SPAN_DECODE_WINDOW = "engine/decode_window"
 SPAN_DECODE_STEP = "engine/decode_step"
+SPAN_PREFILL_CHUNK = "engine/prefill_chunk"
+SPAN_SCHED_PREEMPT = "sched/preempt"
+SPAN_SCHED_RESUME = "sched/resume"
 SPAN_RECALL_SELECT = "recall/select"
 SPAN_RECALL_CORRECTION = "recall/correction"
 SPAN_RECALL_TOPUP = "recall/topup"

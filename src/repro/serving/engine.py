@@ -69,6 +69,11 @@ class Request:
     max_new_tokens: int = 32
     frontend: Optional[np.ndarray] = None
     eos_token: Optional[int] = None
+    # scheduling priority (higher = more urgent). Admission stays FIFO, but
+    # with ``fkv.preempt`` a queued request whose priority STRICTLY exceeds
+    # the lowest-priority running request's swaps that victim's paged KV out
+    # to host and takes its slot; the victim resumes bit-identically later.
+    priority: int = 0
 
 
 @dataclass
@@ -80,6 +85,94 @@ class Completion:
     steps: int
     stats: dict
     metrics: Optional[RequestMetrics] = None
+
+
+class PrefillJob:
+    """Incremental chunked prefill of one admitted request.
+
+    The prompt is consumed in chunks: the opening chunk runs the ordinary
+    prefill forward (capturing its post-RoPE K/V), every later chunk runs
+    ``model.prefill_extend`` over the K/V accumulated so far — exactly the
+    prefix-cache extension math, so each chunk's attention equals the same
+    span of a whole-shot prefill bit-for-bit. Intermediate chunks skip the
+    paged-state rebuild (``build_state=False``: their states would be
+    discarded at the next chunk); only the FINAL chunk builds the decode
+    state, from the full concatenated K/V — the identical construction the
+    whole-shot path uses — so the state spliced into the slot pool and the
+    first-token logits are bit-identical to un-chunked prefill.
+
+    A prefix-cache hit seeds the accumulated K/V with the cached span
+    (shrunk so the remaining suffix is an exact bucket multiple, as in
+    ``prefill_one``); on completion the full prompt's K/V is inserted back
+    into the trie. The scheduler owns the pacing: it calls ``advance`` with
+    its per-window token budget, interleaving chunks with decode windows so
+    co-batched decoders stall at most one chunk's compute.
+
+    Note each distinct (prefix_len, suffix_len) pair is its own compiled
+    extension shape — steady chunk budgets keep the shape set small.
+    """
+
+    def __init__(self, engine: "ServeEngine", req: Request):
+        self.engine, self.req = engine, req
+        padded = engine._pad_prompt(np.asarray(req.tokens, np.int32))
+        assert len(padded) + req.max_new_tokens <= engine.max_len, (
+            f"request {req.uid}: padded prompt {len(padded)} + "
+            f"{req.max_new_tokens} new tokens exceeds max_len {engine.max_len}")
+        self.seq = tuple(int(t) for t in padded)
+        self.pos = 0                    # prompt tokens prefilled so far
+        self.hit = 0                    # of which served by the prefix cache
+        self.chunks = 0
+        self._flat: Optional[List[np.ndarray]] = None  # accumulated K/V
+        self.result = None  # (logits (1,V), B=1 state, hit, padded) when done
+        cache = engine.prefix_cache
+        if cache is not None:
+            matched, payload = cache.match(self.seq)
+            b = engine.prefill_bucket
+            suffix = max(b, -(-(len(self.seq) - matched) // b) * b)
+            tp = len(self.seq) - suffix
+            if tp >= max(b, engine.fkv.page_size):   # at least one page reused
+                self._flat = [np.asarray(a[:tp]) for a in payload]
+                self.pos = self.hit = tp
+
+    @property
+    def remaining(self) -> int:
+        return len(self.seq) - self.pos
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    def advance(self, budget: int) -> int:
+        """Run ONE chunk of at most ``budget`` prompt tokens; returns the
+        tokens consumed. The final chunk sets ``result`` to the same tuple
+        ``prefill_one`` returns."""
+        assert not self.done and budget > 0
+        eng = self.engine
+        n = min(int(budget), self.remaining)
+        last = n == self.remaining
+        if self.pos == 0:
+            chunk = np.asarray(self.seq[:n], np.int32)
+            fn = eng._prefill_kv if last else eng._prefill_kv_nostate
+            logits, state, kv = fn(
+                eng.params, {"tokens": jnp.asarray(chunk[None])})
+            self._flat = eng._kv_tree_to_flat(kv)
+        else:
+            ptree = eng._flat_to_prefix_tree(self._flat)
+            suf = np.asarray(self.seq[self.pos: self.pos + n], np.int32)
+            fn = eng._extend if last else eng._extend_nostate
+            logits, state, suf_kv = fn(eng.params,
+                                       {"tokens": jnp.asarray(suf[None])},
+                                       ptree)
+            self._flat = [np.concatenate([p, s], axis=0) for p, s in
+                          zip(self._flat, eng._kv_tree_to_flat(suf_kv))]
+        self.pos += n
+        self.chunks += 1
+        if last:
+            if eng.prefix_cache is not None:
+                eng.prefix_cache.insert(self.seq, self._flat)
+            self._flat = None
+            self.result = (logits, state, self.hit, len(self.seq))
+        return n
 
 
 class ServeEngine:
@@ -126,11 +219,24 @@ class ServeEngine:
             lambda p, b: prefill(cfg, fkv, p, b, max_len=max_len,
                                  state_dtype=state_dtype, mesh=mesh,
                                  return_kv=True))
+        # chunked-prefill opening chunk (more chunks follow): capture the
+        # chunk's K/V but skip the paged-state build it would discard
+        self._prefill_kv_nostate = jax.jit(
+            lambda p, b: prefill(cfg, fkv, p, b, max_len=max_len,
+                                 state_dtype=state_dtype, mesh=mesh,
+                                 return_kv=True, build_state=False))
         self._extend = jax.jit(
             lambda p, b, pkv: prefill_extend(cfg, fkv, p, b, pkv,
                                              max_len=max_len,
                                              state_dtype=state_dtype,
                                              mesh=mesh))
+        # chunked-prefill intermediate chunks: same extension math but no
+        # paged-state rebuild (the state would be discarded at the next chunk)
+        self._extend_nostate = jax.jit(
+            lambda p, b, pkv: prefill_extend(cfg, fkv, p, b, pkv,
+                                             max_len=max_len,
+                                             state_dtype=state_dtype,
+                                             mesh=mesh, build_state=False))
         # the decode state (arg 1) is DONATED: XLA updates the paged KV slot
         # pool, host pool, quant scales, rings and selection buffers in
         # place instead of copying the whole pytree every step. Callers
@@ -194,6 +300,24 @@ class ServeEngine:
                                        dense_itemsize=itemsize)
             em.pool_bytes_physical = float(detail["physical"])
             em.pool_bytes_dense = float(detail["dense"])
+
+    @property
+    def prefill_chunk_tokens(self) -> int:
+        """Per-window chunked-prefill token budget; 0 = whole-shot prefill
+        at admission. Forced to 0 for stacks the extension path cannot serve
+        (recurrent mixers, encoder-decoder, frontends) — the scheduler then
+        keeps the inline whole-shot behavior for every request."""
+        return self.fkv.prefill_chunk_tokens if self._can_extend else 0
+
+    @property
+    def preempt(self) -> bool:
+        """Whether the scheduler may swap lower-priority running requests
+        out to host to admit strictly higher-priority queued ones."""
+        return self.fkv.preempt
+
+    def start_prefill_job(self, req: Request) -> PrefillJob:
+        """Open an incremental prefill for ``req`` (chunked-prefill path)."""
+        return PrefillJob(self, req)
 
     def make_slot_pool(self, num_slots: int) -> SlotPool:
         return SlotPool(self.cfg, self.fkv, num_slots, self.max_len,

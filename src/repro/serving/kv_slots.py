@@ -117,6 +117,8 @@ class SlotPool:
 
     def alloc(self, owner_uid: int) -> int:
         slot = self._free.pop()
+        assert self.owner[slot] is None, \
+            f"slot {slot} already owned by request {self.owner[slot]}"
         self._dirty.discard(slot)       # insert() will overwrite every leaf
         self.owner[slot] = owner_uid
         self.allocs += 1
@@ -159,6 +161,31 @@ class SlotPool:
     def extract(self, slot: int):
         """Read one slot back out as a B=1 state (testing / migration)."""
         return self._extract(self.state, jnp.int32(slot))
+
+    # -- preemption swap (scheduler priority preemption) -----------------
+    def swap_out(self, slot: int):
+        """Pull slot ``slot``'s entire decode state to host numpy and return
+        it (the caller frees the slot separately).
+
+        The swap unit is the slot's full B=1 pytree — paged pool (at its
+        PACKED width under the quantized host tier: the int8/int4 payload and
+        fp32 scales move as stored, never dequantized), page summaries, sink
+        + window rings, selection buffers ``sel_k/sel_v/sel_idx``, ``qprev``,
+        lengths and ``pos`` — so ``swap_in`` restores a bit-identical slot:
+        mid-decode generation resumes exactly where it left off, including
+        the staged speculative recall buffer the overlap pipeline carries
+        across steps."""
+        from repro.core.offload import swap_state_to_host
+        return swap_state_to_host(self._extract(self.state, jnp.int32(slot)))
+
+    def swap_in(self, host_state, slot: int):
+        """Splice a ``swap_out`` host state back into physical slot ``slot``
+        (allocated by the caller). Leaves upload at their stored dtypes —
+        the packed pool representation round-trips exactly — and reuse the
+        same compiled splice as ``insert`` (shapes match the template)."""
+        self.state = self._splice(self.state,
+                                  jax.tree.map(jnp.asarray, host_state),
+                                  jnp.int32(slot))
 
     def reset_all(self):
         self.state = self._place(self._init_full())

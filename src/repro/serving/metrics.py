@@ -43,6 +43,9 @@ class RequestMetrics:
     new_tokens: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    priority: int = 0
+    preemptions: int = 0              # times this request was swapped out
+    max_token_gap_s: float = 0.0      # worst observed inter-token gap
 
     @property
     def queue_wait_s(self) -> Optional[float]:
@@ -101,6 +104,18 @@ _COUNTER_ATTRS = {
                         "kv heads that triggered fine-grained correction"),
     "kv_head_steps": ("spec_kv_head_steps_total", float,
                       "kv-head decision opportunities (heads x steps)"),
+    "prefill_chunks": ("sched_prefill_chunks_total", int,
+                       "chunked-prefill chunks executed"),
+    "prefill_chunk_tokens": ("sched_prefill_chunk_tokens_total", int,
+                             "prompt tokens prefilled through chunks"),
+    "preemptions": ("sched_preemptions_total", int,
+                    "requests swapped out of their slot to host"),
+    "resumes": ("sched_resumes_total", int,
+                "swapped-out requests swapped back into a slot"),
+    "swap_out_bytes": ("sched_swap_out_bytes_total", float,
+                       "decode-state bytes pulled to host at preemption"),
+    "swap_in_bytes": ("sched_swap_in_bytes_total", float,
+                      "decode-state bytes pushed back at resume"),
 }
 _GAUGE_ATTRS = {
     "dropped_pages": ("recall_dropped_in_flight_pages", float,
@@ -114,6 +129,7 @@ H_TTFT = "request_ttft_seconds"
 H_ITL = "request_itl_seconds"
 H_PREFILL = "request_prefill_seconds"
 H_DECODE_STEP = "engine_decode_step_seconds"
+H_TOKEN_GAP = "request_token_gap_seconds"
 H_HIT_RATE = "spec_hit_rate"
 H_CORRECTION_RATE = "spec_correction_rate"
 H_CHURN = "spec_churn_pages"
@@ -166,6 +182,18 @@ class EngineMetrics:
     def observe_decode_step(self, dt_s: float):
         self.registry.histogram(H_DECODE_STEP, LATENCY_BUCKETS,
                                 "per-step decode latency").observe(dt_s)
+
+    def observe_token_gap(self, gap_s: float):
+        """One emitted token's gap since the request's previous token.
+
+        Unlike ``itl_s`` (a per-request mean that averages stalls away),
+        the gap distribution exposes the tail the scheduler work targets:
+        a co-batched decoder stalled behind a whole-shot prefill shows up
+        as one huge gap, and its p99 is what chunked prefill bounds to
+        ~one chunk's compute. Always recorded (a histogram observe per
+        token, same cost class as the per-request latency histograms)."""
+        self.registry.histogram(H_TOKEN_GAP, LATENCY_BUCKETS,
+                                "per-token inter-token gap").observe(gap_s)
 
     def observe_speculation(self, sel: float, hit: float, churn: float,
                             corrected: float, kv_heads: float):
@@ -365,6 +393,16 @@ class EngineMetrics:
             "tp": {
                 "tp": self.tp,
                 "per_shard_transfer_bytes": self.per_shard_transfer_bytes,
+            },
+            "scheduling": {
+                "prefill_chunks": self.prefill_chunks,
+                "prefill_chunk_tokens": self.prefill_chunk_tokens,
+                "preemptions": self.preemptions,
+                "resumes": self.resumes,
+                "swap_out_bytes": self.swap_out_bytes,
+                "swap_in_bytes": self.swap_in_bytes,
+                "token_gap_s": self._hist_summary(H_TOKEN_GAP,
+                                                  LATENCY_BUCKETS),
             },
             "dispatch": {
                 "sync_interval": self.sync_interval,

@@ -23,6 +23,26 @@ host synchronization per decode step (sampled on the same per-request key
 streams, so outputs are identical — and greedy is bit-identical across both
 paths and every ``sync_interval``).
 
+CHUNKED PREFILL (``backend.prefill_chunk_tokens > 0``): admission no longer
+runs the whole prompt's prefill inline. The request takes a slot and opens a
+``backend.start_prefill_job`` state machine; each scheduler round spends at
+most ``prefill_chunk_tokens`` prompt tokens across the open jobs (oldest
+first) before dispatching the next decode window, so co-batched decoders
+stall for at most ~one chunk's compute instead of the whole prefill. The
+final chunk builds the decode state from the full accumulated K/V — the
+prefix-cache extension math — so outputs are bit-identical to whole-shot.
+
+PREEMPTION (``backend.preempt``): admission stays FIFO, but when the pool is
+full and a queued request's priority STRICTLY exceeds the lowest-priority
+running (decode-state) request's, that victim's entire slot state — paged
+pool at its packed quantized width, scales, rings, selection buffers — is
+swapped to host (``SlotPool.swap_out``), the slot handed to the candidate,
+and the victim re-queued as SWAPPED; on re-admission ``swap_in`` restores
+the slot bit-exactly and its lane (current token, key stream position,
+count) is rebuilt from host bookkeeping, so the victim's remaining tokens
+are bit-identical to an uninterrupted run. Strict priority inequality means
+equal-priority traffic never preempts (liveness: no swap cycles).
+
 The scheduler is backend-agnostic: it drives any object exposing
 
     prefill_one(request) -> (logits (1, V), B=1 decode state, prefix_hit_tokens,
@@ -33,6 +53,9 @@ The scheduler is backend-agnostic: it drives any object exposing
     decode_window(state, loop) -> (state, loop, toks, valid, stats, n)
     make_slot_pool(num_slots) -> kv_slots.SlotPool
     page_block_bytes -> int
+    prefill_chunk_tokens -> int        (optional; 0 = whole-shot prefill)
+    start_prefill_job(request) -> job  (optional; .advance/.done/.result)
+    preempt -> bool                    (optional; pool needs swap_out/swap_in)
 
 (``ServeEngine`` is the production backend; tests inject lightweight fakes.
 A backend without ``decode_window`` falls back to the synchronous path.)
@@ -44,13 +67,16 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.recall_pipeline import RecallFlightTracker
 from repro.models.model import DECODE_STAT_KEYS as _STAT_KEYS
 from repro.obs import Observability
-from repro.obs.trace import SPAN_DECODE_STEP, SPAN_DECODE_WINDOW
+from repro.obs.trace import (SPAN_DECODE_STEP, SPAN_DECODE_WINDOW,
+                             SPAN_PREFILL_CHUNK, SPAN_SCHED_PREEMPT,
+                             SPAN_SCHED_RESUME)
 from repro.serving.metrics import EngineMetrics, RequestMetrics
 from repro.serving.sampling import request_key
 
@@ -59,8 +85,18 @@ from repro.serving.sampling import request_key
 _PAGE_KEYS = ("sync_pages", "async_pages", "reused_pages", "sel_pages",
               "spec_hit_pages", "churn_pages")
 
-# request lifecycle states
+# request lifecycle states (SWAPPED = preempted, paged KV parked on host)
 QUEUED, PREFILL, DECODE, DONE = "queued", "prefill", "decode", "done"
+SWAPPED = "swapped"
+
+
+def _prio(tr: "_Tracked") -> int:
+    return getattr(tr.req, "priority", 0)
+
+
+def _state_nbytes(host_state) -> float:
+    return float(sum(leaf.nbytes for leaf in jax.tree.leaves(host_state)
+                     if hasattr(leaf, "nbytes")))
 
 
 @dataclass
@@ -73,6 +109,10 @@ class _Tracked:
     tokens: List[int] = field(default_factory=list)
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    job: object = None                # open PrefillJob (chunked prefill)
+    host_state: object = None         # swapped-out B=1 decode state (numpy)
+    flight_pages: float = 0.0         # staged recall suspended with the swap
+    last_tok_t: Optional[float] = None  # run-relative time of last token
     agg: Dict[str, float] = field(
         default_factory=lambda: {k: 0.0 for k in _STAT_KEYS})
 
@@ -167,6 +207,7 @@ class ContinuousScheduler:
         for i, r in enumerate(requests):
             rm = RequestMetrics(uid=r.uid, prompt_tokens=len(r.tokens),
                                 max_new_tokens=r.max_new_tokens,
+                                priority=getattr(r, "priority", 0),
                                 enqueue_t=now())
             queue.append(_Tracked(req=r, order=i, metrics=rm))
 
@@ -181,9 +222,14 @@ class ContinuousScheduler:
         flight = getattr(backend, "recall_tracker", None) \
             or RecallFlightTracker()
         active: Dict[int, _Tracked] = {}
+        prefilling: Dict[int, _Tracked] = {}   # slot -> open chunked prefill
         lanes = _Lanes(pool.num_slots)
         done: List[_Tracked] = []
         self._step_idx = 0
+        chunk = int(getattr(backend, "prefill_chunk_tokens", 0) or 0)
+        if chunk > 0 and not hasattr(backend, "start_prefill_job"):
+            chunk = 0
+        preempt_on = bool(getattr(backend, "preempt", False))
 
         def finish(tr: _Tracked, slot: Optional[int]):
             tr.state = DONE
@@ -227,6 +273,7 @@ class ContinuousScheduler:
                         float(stats_np["kv_heads"][s]))
             if ts is not None and self._trace.enabled:
                 self._trace_step(stats_np, live_slots, ts, dt)
+            tok_t = (ts + dt) if ts is not None else now()
             for s in live_slots:
                 tr = active[s]
                 tr.decode_s += dt
@@ -236,42 +283,158 @@ class ContinuousScheduler:
                 tr.tokens.append(tok)
                 lanes.cur[s] = tok
                 lanes.count[s] += 1
+                if tr.last_tok_t is not None:
+                    gap = max(tok_t - tr.last_tok_t, 0.0)
+                    em.observe_token_gap(gap)
+                    if gap > tr.metrics.max_token_gap_s:
+                        tr.metrics.max_token_gap_s = gap
+                tr.last_tok_t = tok_t
                 if tr.finished():
                     del active[s]
                     finish(tr, s)
             self._step_idx += 1
 
-        while queue or active:
-            # -- admission: refill freed slots at the host boundary --------
-            while queue and pool.free_count:
-                tr = queue.popleft()
-                if tr.req.max_new_tokens <= 0:
-                    finish(tr, None)
-                    continue
-                tr.state = PREFILL
-                tr.metrics.prefill_start_t = now()
-                slot = pool.alloc(tr.req.uid)
-                tp = time.perf_counter()
-                logits1, state1, hit, padded = backend.prefill_one(tr.req)
-                pool.insert(state1, slot)
-                # per-request sample stream: token i <- fold_in(rkey, i),
-                # independent of slot placement and co-scheduling
-                rkey = request_key(seed, tr.req.uid)
-                tok = int(np.asarray(backend.sample_slot(logits1, rkey, 0))[0])
-                tr.prefill_s = time.perf_counter() - tp
-                tr.metrics.first_token_t = now()
-                tr.metrics.prefix_hit_tokens = hit
-                tr.metrics.padded_prompt_tokens = padded
-                tr.tokens.append(tok)
-                tr.state = DECODE
+        def begin_decode(tr, slot, logits1, rkey):
+            """First token out of a completed prefill -> decode lane."""
+            tok = int(np.asarray(backend.sample_slot(logits1, rkey, 0))[0])
+            tr.metrics.first_token_t = now()
+            tr.last_tok_t = tr.metrics.first_token_t
+            tr.tokens.append(tok)
+            tr.state = DECODE
+            tr.slot = slot
+            if tr.finished():           # max_new_tokens == 1 or instant EOS
+                finish(tr, slot)
+            else:
+                active[slot] = tr
+                lanes.admit(slot, tok, np.asarray(rkey), 1,
+                            tr.req.max_new_tokens,
+                            getattr(tr.req, "eos_token", None))
+
+        def resume(tr):
+            """Swap a preempted request's parked KV back into a fresh slot;
+            its lane (current token, key stream, count) rebuilds from host
+            bookkeeping, so generation continues bit-identically."""
+            slot = pool.alloc(tr.req.uid)
+            nbytes = _state_nbytes(tr.host_state)
+            pool.swap_in(tr.host_state, slot)
+            tr.host_state = None
+            flight.restore(slot, tr.flight_pages)
+            tr.flight_pages = 0.0
+            rkey = request_key(seed, tr.req.uid)
+            lanes.admit(slot, tr.tokens[-1], np.asarray(rkey),
+                        len(tr.tokens), tr.req.max_new_tokens,
+                        getattr(tr.req, "eos_token", None))
+            tr.state = DECODE
+            tr.slot = slot
+            active[slot] = tr
+            em.resumes += 1
+            em.swap_in_bytes += nbytes
+            self._trace.instant(SPAN_SCHED_RESUME, now(),
+                                args={"uid": tr.req.uid, "slot": slot,
+                                      "bytes": nbytes})
+
+        def admit_one(tr):
+            """Give the request a slot (caller guarantees one is free)."""
+            if tr.state == SWAPPED:
+                resume(tr)
+                return
+            if tr.req.max_new_tokens <= 0:
+                finish(tr, None)
+                return
+            tr.state = PREFILL
+            tr.metrics.prefill_start_t = now()
+            slot = pool.alloc(tr.req.uid)
+            if chunk > 0:
+                # chunked path: the slot is held while the job advances one
+                # budgeted chunk per scheduler round (advance_prefill)
+                tr.job = backend.start_prefill_job(tr.req)
                 tr.slot = slot
-                if tr.finished():           # max_new_tokens == 1 or instant EOS
-                    finish(tr, slot)
-                else:
-                    active[slot] = tr
-                    lanes.admit(slot, tok, np.asarray(rkey), 1,
-                                tr.req.max_new_tokens,
-                                getattr(tr.req, "eos_token", None))
+                prefilling[slot] = tr
+                return
+            tp = time.perf_counter()
+            logits1, state1, hit, padded = backend.prefill_one(tr.req)
+            pool.insert(state1, slot)
+            # per-request sample stream: token i <- fold_in(rkey, i),
+            # independent of slot placement and co-scheduling
+            rkey = request_key(seed, tr.req.uid)
+            tr.prefill_s = time.perf_counter() - tp
+            tr.metrics.prefix_hit_tokens = hit
+            tr.metrics.padded_prompt_tokens = padded
+            begin_decode(tr, slot, logits1, rkey)
+
+        def preempt_pass():
+            """Swap the lowest-priority running request out to host whenever
+            a STRICTLY higher-priority request waits for a slot. Terminates:
+            each admission removes one queue entry and re-queues only a
+            strictly lower-priority victim."""
+            while queue and active:
+                cand = max(queue, key=lambda t: (_prio(t), -t.order))
+                victim = min(active.values(),
+                             key=lambda t: (_prio(t), -t.order))
+                if _prio(cand) <= _prio(victim):
+                    return
+                slot = victim.slot
+                host = pool.swap_out(slot)
+                nbytes = _state_nbytes(host)
+                victim.host_state = host
+                victim.flight_pages = flight.suspend(slot)
+                del active[slot]
+                pool.free(slot)
+                lanes.retire(slot)
+                victim.state = SWAPPED
+                victim.slot = -1
+                victim.metrics.preemptions += 1
+                em.preemptions += 1
+                em.swap_out_bytes += nbytes
+                self._trace.instant(
+                    SPAN_SCHED_PREEMPT, now(),
+                    args={"uid": victim.req.uid, "slot": slot,
+                          "bytes": nbytes, "by_uid": cand.req.uid})
+                queue.append(victim)
+                queue.remove(cand)
+                admit_one(cand)
+
+        def advance_prefill():
+            """Spend at most one ``chunk`` token budget across the open
+            prefill jobs (oldest first); completed jobs splice their decode
+            state into the slot and join the decode lanes."""
+            budget = chunk
+            for tr in sorted(prefilling.values(), key=lambda t: t.order):
+                while budget > 0 and not tr.job.done:
+                    tc = time.perf_counter()
+                    n = tr.job.advance(budget)
+                    dt = time.perf_counter() - tc
+                    tr.prefill_s += dt
+                    budget -= n
+                    em.prefill_chunks += 1
+                    em.prefill_chunk_tokens += n
+                    self._trace.complete(
+                        SPAN_PREFILL_CHUNK, tc - t0, dt,
+                        args={"uid": tr.req.uid, "tokens": n,
+                              "pos": tr.job.pos, "total": len(tr.job.seq)})
+                if tr.job.done:
+                    slot = tr.slot
+                    del prefilling[slot]
+                    logits1, state1, hit, padded = tr.job.result
+                    tr.job = None
+                    pool.insert(state1, slot)
+                    tr.metrics.prefix_hit_tokens = hit
+                    tr.metrics.padded_prompt_tokens = padded
+                    begin_decode(tr, slot, logits1,
+                                 request_key(seed, tr.req.uid))
+                if budget <= 0:
+                    break
+
+        while queue or active or prefilling:
+            # -- admission: refill freed slots at the host boundary (FIFO) -
+            while queue and pool.free_count:
+                admit_one(queue.popleft())
+            # -- preemption: priority seizes slots from lower-priority work -
+            if preempt_on and queue:
+                preempt_pass()
+            # -- chunked prefill: one token budget per round ---------------
+            if prefilling:
+                advance_prefill()
             if not active:
                 continue
 

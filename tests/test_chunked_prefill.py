@@ -1,0 +1,131 @@
+"""Chunked prefill sweep: bit-identity + exact step accounting.
+
+``prefill_chunk_tokens`` splits admission prefill into budgeted chunks
+interleaved with decode windows. The final chunk rebuilds the decode state
+from the full accumulated K/V — the prefix-cache extension math — so greedy
+outputs must be BIT-IDENTICAL to whole-shot prefill for every budget
+(1 token, one page, whole prompt), with the prefix cache hitting or missing,
+and with the overlapped recall pipeline on or off. Decode-side accounting
+(``EngineMetrics.steps`` / ``active_slot_steps``) must also be identical —
+chunking moves prefill work, never decode work — while the new
+``scheduling`` counters account every admitted prompt token exactly once.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import FreeKVConfig
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.sampling import SamplerConfig
+
+BUCKET = 8
+MAX_NEW = 8
+
+
+@pytest.fixture(scope="module")
+def runs():
+    """One traffic pattern per scenario, executed once per config."""
+    from repro.models.model import init_params
+    cfg = get_config("smollm-360m-smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    # short prompts: budget=1 compiles one extension shape per token
+    short = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+             for n in (10, 12)]
+    shared = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+    waves = [np.concatenate([shared,
+                             rng.integers(0, cfg.vocab_size, 24)
+                             .astype(np.int32)]) for _ in range(2)]
+
+    def gen(prompts, chunk=0, overlap=True, cache=0, batch=2):
+        fkv = FreeKVConfig(method="freekv", page_size=8, budget=64, n_sink=8,
+                           n_window=8, tau=0.8, recall_overlap=overlap,
+                           prefill_chunk_tokens=chunk)
+        eng = ServeEngine(cfg, fkv, params, max_len=256, batch_size=batch,
+                          sampler=SamplerConfig(temperature=0.0),
+                          prefill_bucket=BUCKET, prefix_cache_tokens=cache)
+        reqs = [Request(uid=i, tokens=p, max_new_tokens=MAX_NEW)
+                for i, p in enumerate(prompts)]
+        outs = {o.uid: o.tokens for o in eng.generate(reqs)}
+        return outs, eng.last_metrics
+
+    out = {"short": {}, "cache": {}}
+    for budget in (0, 1, BUCKET, 10 ** 6):
+        out["short"][budget] = gen(short, chunk=budget)
+    out["short"]["sync"] = gen(short, chunk=0, overlap=False)
+    out["short"][f"sync/{BUCKET}"] = gen(short, chunk=BUCKET, overlap=False)
+    # serial admission (batch=1): the second wave's job opens after the
+    # first wave's full-prompt K/V reached the trie, in both modes
+    for budget in (0, BUCKET):
+        out["cache"][budget] = gen(waves, chunk=budget, cache=4096, batch=1)
+    out["cache"]["cold"] = gen(waves, chunk=0, batch=1)
+    out["padded"] = [max(BUCKET, -(-len(p) // BUCKET) * BUCKET)
+                     for p in short]
+    return out
+
+
+@pytest.mark.parametrize("budget", [1, BUCKET, 10 ** 6])
+def test_chunked_outputs_bit_identical(runs, budget):
+    base, _ = runs["short"][0]
+    chunked, em = runs["short"][budget]
+    assert chunked == base, f"budget={budget} changed greedy outputs"
+    assert em.prefill_chunks >= len(base)
+
+
+@pytest.mark.parametrize("budget", [1, BUCKET, 10 ** 6])
+def test_chunked_step_accounting_identical(runs, budget):
+    """Chunking moves prefill work only: per-request decode work is
+    conserved EXACTLY (active_slot_steps = sum of max_new-1), and every
+    admitted (bucket-padded) prompt token is chunk-accounted exactly once.
+    ``steps`` may grow — decode windows legitimately run while later
+    prompts are still chunking (the interleaving chunking exists for)."""
+    _, em0 = runs["short"][0]
+    _, em = runs["short"][budget]
+    assert em.active_slot_steps == em0.active_slot_steps
+    assert em.steps >= em0.steps
+    assert em0.prefill_chunks == em0.prefill_chunk_tokens == 0
+    total = sum(runs["padded"])
+    assert em.prefill_chunk_tokens == total
+    expect = sum(-(-p // budget) for p in runs["padded"])
+    assert em.prefill_chunks == expect
+
+
+def test_chunked_decode_interleaves_with_prefill(runs):
+    """Budget=1: the first request's decode proceeds while the second
+    prompt is still chunking — visible as MORE scheduler rounds carrying
+    fewer live slots for the same conserved active_slot_steps."""
+    _, em0 = runs["short"][0]
+    _, em1 = runs["short"][1]
+    assert em1.steps > em0.steps
+    assert em1.active_slot_steps == em0.active_slot_steps
+
+
+def test_chunked_bit_identical_without_overlap(runs):
+    """recall_overlap off: chunked == whole-shot on the synchronous path
+    too (and equals the overlapped outputs — the existing overlap
+    bit-identity guarantee composes with chunking)."""
+    base_sync, _ = runs["short"]["sync"]
+    chunked_sync, em = runs["short"][f"sync/{BUCKET}"]
+    assert chunked_sync == base_sync
+    assert em.prefill_chunks > 0
+    base, _ = runs["short"][0]
+    assert base_sync == base
+
+
+def test_chunked_prefix_cache_hit_bit_identical(runs):
+    """A cache-hit admission seeds the accumulated K/V with the cached
+    span: outputs still bit-identical, hit accounting unchanged, and only
+    the MISSED suffix tokens are chunked."""
+    cold, _ = runs["cache"]["cold"]
+    whole, em0 = runs["cache"][0]
+    chunked, em = runs["cache"][BUCKET]
+    assert whole == cold == chunked
+    h0 = [m.prefix_hit_tokens for m in em0.requests]
+    h1 = [m.prefix_hit_tokens for m in em.requests]
+    assert h1 == h0 and h1[1] > 0               # second wave hits the trie
+    padded = [m.padded_prompt_tokens for m in em.requests]
+    missed = sum(p - h for p, h in zip(padded, h1))
+    assert em.prefill_chunk_tokens == missed
+    assert em.summary()["scheduling"]["prefill_chunk_tokens"] == missed

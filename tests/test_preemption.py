@@ -1,0 +1,473 @@
+"""Priority preemption + chunked prefill: randomized scheduler suite.
+
+Three layers of coverage:
+
+* a **randomized state-machine suite** (hypothesis-driven when installed —
+  CI — seeded sweep otherwise) drives ``ContinuousScheduler`` with a fake
+  backend/pool over random admit/chunk/preempt/resume/finish interleavings
+  and checks the structural invariants: no slot double-occupancy, every
+  preempted request resumes and finishes, preempt/resume and swap byte
+  counters conserve, token counts conserve, and the produced token streams
+  are BIT-IDENTICAL to a never-preempt never-chunk run of the same traffic
+  (per-request PRNG streams make this a structural property);
+* **SlotPool swap exactness**: ``swap_out`` -> ``swap_in`` round-trips every
+  decode-state leaf bit-for-bit at its stored dtype — the packed int8/int4
+  pool payload and fp32 scales move as stored, never dequantized;
+* **real-engine bit-identity**: greedy outputs with preemption firing (and
+  with chunked prefill + preemption together) equal the uninterrupted run,
+  for kv_quant none and int8 — plus a 2-forced-device subprocess driver
+  repeating the check under tp=2 (pinned whole to one CI shard, see
+  conftest._ATOMIC_MODULES).
+"""
+import json
+import os
+import subprocess
+import sys
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import FreeKVConfig
+from repro.serving.kv_slots import SlotPool
+from repro.serving.scheduler import SWAPPED, ContinuousScheduler
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# fake backend/pool: the scheduler's protocol, no model
+# ---------------------------------------------------------------------------
+@dataclass
+class FakeReq:
+    uid: int
+    tokens: np.ndarray
+    max_new_tokens: int
+    priority: int = 0
+    eos_token: Optional[int] = None
+
+
+def _tok(key_row, count: int) -> int:
+    """Deterministic token from (per-request key, position) ONLY — the
+    same contract the real on-device sampler provides (fold_in(rkey, i)),
+    so placement/co-scheduling/preemption cannot change the stream."""
+    return int((int(key_row[0]) * 2654435761 + int(key_row[1])
+                + count * 97) % 9973)
+
+
+class FakeJob:
+    """Chunked-prefill job protocol: .advance/.done/.result/.pos/.seq."""
+
+    def __init__(self, backend, req):
+        self.backend, self.req = backend, req
+        self.seq = tuple(int(t) for t in req.tokens)
+        self.pos = 0
+        self.chunks = 0
+        self.result = None
+
+    @property
+    def remaining(self):
+        return len(self.seq) - self.pos
+
+    @property
+    def done(self):
+        return self.result is not None
+
+    def advance(self, budget: int) -> int:
+        assert not self.done and budget > 0
+        n = min(int(budget), self.remaining)
+        self.pos += n
+        self.chunks += 1
+        if self.pos == len(self.seq):
+            self.result = (None, self.backend.make_state(self.req.uid),
+                           0, len(self.seq))
+        return n
+
+
+class FakePool:
+    """Slot bookkeeping with the SlotPool surface the scheduler touches.
+    ``alloc`` asserts no double-occupancy — the invariant the randomized
+    suite exercises under preemption churn."""
+
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self.state = {"slots": [None] * num_slots}
+        self.owner: List[Optional[int]] = [None] * num_slots
+        self._free = list(range(num_slots - 1, -1, -1))
+        self.allocs = 0
+        self.swaps = 0
+
+    @property
+    def free_count(self):
+        return len(self._free)
+
+    def alloc(self, uid: int) -> int:
+        slot = self._free.pop()
+        assert self.owner[slot] is None, \
+            f"slot {slot} double-allocated: owned by {self.owner[slot]}"
+        self.owner[slot] = uid
+        self.allocs += 1
+        return slot
+
+    def free(self, slot: int):
+        assert self.owner[slot] is not None, f"slot {slot} already free"
+        self.owner[slot] = None
+        self._free.append(slot)
+
+    def flush_resets(self):
+        pass
+
+    def insert(self, src, slot: int):
+        self.state["slots"][slot] = src
+
+    def swap_out(self, slot: int):
+        host = self.state["slots"][slot]
+        assert host is not None, f"slot {slot} swapped out empty"
+        self.state["slots"][slot] = None
+        self.swaps += 1
+        return host
+
+    def swap_in(self, host, slot: int):
+        assert host is not None
+        self.state["slots"][slot] = host
+
+
+@dataclass
+class FakeBackend:
+    """Sync-path scheduler protocol; tokens depend only on (uid, count)."""
+    prefill_chunk_tokens: int = 0
+    preempt: bool = False
+    page_block_bytes: int = 1024
+    states: dict = field(default_factory=dict)
+
+    def make_state(self, uid: int):
+        # distinct nbytes per request so swap byte accounting is testable
+        st = {"uid": np.full((1,), uid, np.int64),
+              "payload": np.zeros((uid % 3 + 1, 4), np.float32)}
+        self.states[uid] = st
+        return st
+
+    def prefill_one(self, req):
+        return None, self.make_state(req.uid), 0, len(req.tokens)
+
+    def start_prefill_job(self, req):
+        return FakeJob(self, req)
+
+    def sample_slot(self, logits, rkey, count):
+        return np.asarray([_tok(np.asarray(rkey), int(count))])
+
+    def sample_lanes(self, logits, keys, counts):
+        k = np.asarray(keys)
+        c = np.asarray(counts)
+        return np.asarray([_tok(k[i], int(c[i])) for i in range(len(c))])
+
+    def step(self, state, tokens):
+        # verify every occupied slot still holds ITS request's state — a
+        # wrong swap restore would decode over someone else's KV
+        for s, st in enumerate(state["slots"]):
+            if st is not None:
+                assert st is self.states[int(st["uid"][0])]
+        return None, state, {}
+
+
+def _traffic(rng, n_req, max_prio):
+    return [FakeReq(uid=i,
+                    tokens=rng.integers(0, 5000, rng.integers(1, 20))
+                    .astype(np.int32),
+                    max_new_tokens=int(rng.integers(0, 9)),
+                    priority=int(rng.integers(0, max_prio + 1)))
+            for i in range(n_req)]
+
+
+def _run(reqs, num_slots, chunk, preempt, seed=7):
+    backend = FakeBackend(prefill_chunk_tokens=chunk, preempt=preempt)
+    pool = FakePool(num_slots)
+    done, em = ContinuousScheduler(backend, pool).run(
+        [FakeReq(r.uid, r.tokens, r.max_new_tokens, r.priority, r.eos_token)
+         for r in reqs], seed=seed)
+    return done, em, pool
+
+
+def _check_scenario(seed, n_req, num_slots, chunk, max_prio, preempt):
+    rng = np.random.default_rng(seed)
+    reqs = _traffic(rng, n_req, max_prio)
+    done, em, pool = _run(reqs, num_slots, chunk, preempt)
+    base, em0, _ = _run(reqs, num_slots, chunk=0, preempt=False)
+
+    # every request finishes, in submission order, with its full budget
+    assert [tr.req.uid for tr in done] == [r.uid for r in reqs]
+    for tr, r in zip(done, reqs):
+        assert tr.state == "done" and tr.state != SWAPPED
+        assert len(tr.tokens) == r.max_new_tokens
+        assert tr.host_state is None          # nothing left parked on host
+    # bit-identity vs the never-chunk never-preempt run of the same traffic
+    assert [tr.tokens for tr in done] == [tr.tokens for tr in base]
+    # token conservation: decode steps account for every token after the
+    # prefill-sampled first one, invariant to chunking and preemption
+    admitted = [r for r in reqs if r.max_new_tokens > 0]
+    assert sum(len(tr.tokens) for tr in done) == \
+        sum(r.max_new_tokens for r in reqs)
+    assert em.active_slot_steps == em0.active_slot_steps == \
+        sum(r.max_new_tokens - 1 for r in admitted)
+    # pool drained: all slots free, no owners
+    assert pool.free_count == pool.num_slots
+    assert all(o is None for o in pool.owner)
+    # preempt/resume and swap byte counters conserve
+    assert em.preemptions == em.resumes == pool.swaps
+    assert em.swap_out_bytes == em.swap_in_bytes
+    assert sum(tr.metrics.preemptions for tr in done) == em.preemptions
+    if not preempt or max_prio == 0:
+        assert em.preemptions == 0
+    # chunked prefill accounting: every admitted prompt token chunked once
+    if chunk > 0:
+        assert em.prefill_chunk_tokens == sum(len(r.tokens)
+                                              for r in admitted)
+        if admitted:
+            assert em.prefill_chunks >= len(admitted)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @given(seed=st.integers(0, 2 ** 31 - 1),
+           n_req=st.integers(1, 8),
+           num_slots=st.integers(1, 4),
+           chunk=st.integers(0, 6),
+           max_prio=st.integers(0, 2),
+           preempt=st.booleans())
+    @settings(max_examples=60, deadline=None)
+    def test_scheduler_state_machine(seed, n_req, num_slots, chunk,
+                                     max_prio, preempt):
+        _check_scenario(seed, n_req, num_slots, chunk, max_prio, preempt)
+
+except ImportError:                                   # pragma: no cover
+    @pytest.mark.parametrize("seed", range(12))
+    @pytest.mark.parametrize("num_slots,chunk,max_prio,preempt", [
+        (1, 0, 2, True), (2, 3, 2, True), (3, 1, 1, True),
+        (2, 0, 0, True), (4, 6, 2, True), (2, 4, 0, False),
+    ])
+    def test_scheduler_state_machine(seed, num_slots, chunk, max_prio,
+                                     preempt):
+        _check_scenario(seed, n_req=2 + seed % 7, num_slots=num_slots,
+                        chunk=chunk, max_prio=max_prio, preempt=preempt)
+
+
+def test_priority_preempts_lowest_and_resumes():
+    """Directed scenario: a late high-priority request steals the slot of
+    the LOWEST-priority running request, which resumes and finishes with an
+    unchanged token stream; equal priorities never preempt."""
+    reqs = [FakeReq(0, np.arange(6, dtype=np.int32), 6, priority=0),
+            FakeReq(1, np.arange(8, dtype=np.int32), 6, priority=1),
+            FakeReq(2, np.arange(4, dtype=np.int32), 3, priority=2)]
+    done, em, _ = _run(reqs, num_slots=2, chunk=0, preempt=True)
+    assert em.preemptions == 1
+    by_uid = {tr.req.uid: tr for tr in done}
+    assert by_uid[0].metrics.preemptions == 1      # lowest priority evicted
+    assert by_uid[1].metrics.preemptions == 0
+    assert by_uid[2].metrics.preemptions == 0
+    # the high-priority request finishes before its victim
+    assert by_uid[2].metrics.finish_step <= by_uid[0].metrics.finish_step
+    base, _, _ = _run(reqs, num_slots=2, chunk=0, preempt=False)
+    assert [tr.tokens for tr in done] == [tr.tokens for tr in base]
+
+    same = [FakeReq(i, np.arange(4, dtype=np.int32), 4, priority=1)
+            for i in range(3)]
+    _, em2, _ = _run(same, num_slots=2, chunk=0, preempt=True)
+    assert em2.preemptions == 0                    # strict inequality only
+
+
+# ---------------------------------------------------------------------------
+# SlotPool swap round trip: bit-exact at the stored (packed) width
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def smoke():
+    from repro.models.model import init_params
+    cfg = get_config("smollm-360m-smoke")
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _engine(cfg, params, **kw):
+    from repro.serving.engine import ServeEngine
+    from repro.serving.sampling import SamplerConfig
+    fkv = FreeKVConfig(method="freekv", page_size=8, budget=64, n_sink=8,
+                       n_window=8, tau=0.8, **kw)
+    return ServeEngine(cfg, fkv, params, max_len=256, batch_size=2,
+                       sampler=SamplerConfig(temperature=0.0),
+                       prefill_bucket=8)
+
+
+@pytest.mark.parametrize("kv_quant", ["none", "int8", "int4"])
+def test_slot_swap_roundtrip_exact(smoke, kv_quant):
+    """swap_out -> swap_in reproduces every leaf bit-for-bit at its stored
+    dtype — the quantized pool payload moves packed, never dequantized —
+    even into a DIFFERENT physical slot."""
+    from repro.serving.engine import Request
+    cfg, params = smoke
+    eng = _engine(cfg, params, kv_quant=kv_quant)
+    pool = eng.make_slot_pool(2)
+    rng = np.random.default_rng(3)
+    req = Request(uid=9, tokens=rng.integers(0, cfg.vocab_size, 48)
+                  .astype(np.int32), max_new_tokens=4)
+    _, state1, _, _ = eng.prefill_one(req)
+    pool.insert(state1, 0)
+    before = jax.tree.map(np.asarray, pool.extract(0))
+    host = pool.swap_out(0)
+    for leaf, ref in zip(jax.tree.leaves(host), jax.tree.leaves(before)):
+        assert isinstance(leaf, np.ndarray)
+        assert leaf.dtype == ref.dtype          # packed width preserved
+    if kv_quant != "none":                      # pool payload stored packed
+        assert any(l.dtype == np.int8 for l in jax.tree.leaves(host))
+    pool.swap_in(host, 1)
+    after = jax.tree.map(np.asarray, pool.extract(1))
+    jax.tree.map(np.testing.assert_array_equal, before, after)
+
+
+# ---------------------------------------------------------------------------
+# real engine: preemption fires and greedy outputs are unchanged
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def preempt_runs(smoke):
+    """Run the mixed-priority traffic once per config; tests assert views."""
+    from repro.serving.engine import Request
+    cfg, params = smoke
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (40, 64, 24)]
+
+    def gen(**kw):
+        eng = _engine(cfg, params, **kw)
+        reqs = [Request(uid=i, tokens=p, max_new_tokens=10,
+                        priority=(1 if i == 2 else 0))
+                for i, p in enumerate(prompts)]
+        outs = {o.uid: o.tokens for o in eng.generate(reqs)}
+        return outs, eng.last_metrics
+
+    runs = {}
+    for quant in ("none", "int8"):
+        runs[f"base/{quant}"] = gen(kv_quant=quant)
+        runs[f"pre/{quant}"] = gen(kv_quant=quant, preempt=True)
+    runs["both/none"] = gen(preempt=True, prefill_chunk_tokens=8)
+    return runs
+
+
+@pytest.mark.parametrize("quant", ["none", "int8"])
+def test_preemption_bit_identical_real_engine(preempt_runs, quant):
+    base, _ = preempt_runs[f"base/{quant}"]
+    pre, em = preempt_runs[f"pre/{quant}"]
+    assert pre == base, "preemption changed greedy outputs"
+    assert em.preemptions >= 1 and em.resumes == em.preemptions
+    assert em.swap_out_bytes == em.swap_in_bytes > 0
+    pm = {m.uid: m for m in em.requests}
+    assert pm[0].preemptions + pm[1].preemptions == em.preemptions
+    assert pm[2].preemptions == 0               # high priority never evicted
+
+
+def test_preemption_with_chunked_prefill_real_engine(preempt_runs):
+    base, _ = preempt_runs["base/none"]
+    both, em = preempt_runs["both/none"]
+    assert both == base
+    assert em.preemptions >= 1 and em.prefill_chunks > 0
+    s = em.summary()["scheduling"]
+    assert s["preemptions"] == em.preemptions
+    assert s["swap_out_bytes"] == em.swap_out_bytes
+    assert s["token_gap_s"]["count"] > 0
+
+
+# ---------------------------------------------------------------------------
+# tp=2: same invariants under KV-head-group sharding (subprocess driver)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="session")
+def tp_preempt_report(tmp_path_factory):
+    out = tmp_path_factory.mktemp("tp_preempt") / "report.json"
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    subprocess.run([sys.executable, os.path.abspath(__file__), str(out)],
+                   check=True, timeout=1500, env=env, cwd=REPO)
+    return json.loads(out.read_text())
+
+
+def test_tp2_preemption_bit_identical(tp_preempt_report):
+    r = tp_preempt_report["preempt"]
+    assert r["tp2_preemptions"] >= 1
+    assert r["tp2_tokens"] == r["tp1_tokens"] == r["base_tokens"]
+    # the swap moves the same global state regardless of sharding
+    assert r["tp2_swap_bytes"] == r["tp1_swap_bytes"] > 0
+
+
+def test_tp2_swap_roundtrip_quantized(tp_preempt_report):
+    r = tp_preempt_report["swap_roundtrip_int8"]
+    assert r["bit_equal"] is True
+    assert r["has_packed_leaf"] is True
+
+
+def _driver(out_path):
+    from repro.models.model import init_params
+    from repro.serving.engine import Request, ServeEngine
+    from repro.serving.sampling import SamplerConfig
+    assert len(jax.devices()) >= 2, jax.devices()
+    cfg = get_config("granite-3-8b-smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (40, 72, 56, 32)]
+
+    def engine(tp, **kw):
+        fkv = FreeKVConfig(method="freekv", page_size=8, budget=48, n_sink=8,
+                           n_window=8, tau=0.8, **kw)
+        return ServeEngine(cfg, fkv, params, max_len=160, batch_size=2,
+                           sampler=SamplerConfig(temperature=0.0),
+                           prefill_bucket=24, tp=tp)
+
+    def gen(eng):
+        reqs = [Request(uid=i, tokens=p, max_new_tokens=6,
+                        priority=(1 if i == 3 else 0))
+                for i, p in enumerate(prompts)]
+        return [c.tokens for c in eng.generate(reqs)]
+
+    report = {}
+    base = gen(engine(1))
+    e1 = engine(1, preempt=True)
+    t1 = gen(e1)
+    e2 = engine(2, preempt=True)
+    t2 = gen(e2)
+    report["preempt"] = {
+        "base_tokens": base, "tp1_tokens": t1, "tp2_tokens": t2,
+        "tp1_preemptions": e1.last_metrics.preemptions,
+        "tp2_preemptions": e2.last_metrics.preemptions,
+        "tp1_swap_bytes": e1.last_metrics.swap_out_bytes,
+        "tp2_swap_bytes": e2.last_metrics.swap_out_bytes,
+    }
+
+    # int8 pool swap round trip under a 2-shard pool
+    eq = engine(2, kv_quant="int8")
+    pool = eq.make_slot_pool(2)
+    _, state1, _, _ = eq.prefill_one(
+        Request(uid=5, tokens=prompts[1], max_new_tokens=4))
+    pool.insert(state1, 0)
+    before = jax.tree.map(np.asarray, pool.extract(0))
+    host = pool.swap_out(0)
+    pool.swap_in(host, 1)
+    after = jax.tree.map(np.asarray, pool.extract(1))
+    flat_b, flat_a = jax.tree.leaves(before), jax.tree.leaves(after)
+    report["swap_roundtrip_int8"] = {
+        "bit_equal": bool(all(np.array_equal(a, b)
+                              for a, b in zip(flat_b, flat_a))),
+        "has_packed_leaf": bool(any(np.asarray(l).dtype == np.int8
+                                    for l in jax.tree.leaves(host))),
+    }
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, default=str)
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    _driver(sys.argv[1])

@@ -47,6 +47,7 @@ COMMANDS = {
                  "--smoke"],
     "serving": [sys.executable, "benchmarks/serving_throughput.py",
                 "--smoke"],
+    "preempt": [sys.executable, "benchmarks/preempt_latency.py", "--smoke"],
     "obs": [sys.executable, "benchmarks/obs_overhead.py", "--smoke"],
 }
 
@@ -106,6 +107,24 @@ GATES = {
             (("throughput_speedup",), "higher"),
             (("ttft_reduction",), "higher"),
             (("slot_occupancy",), "higher"),
+        ],
+    },
+    "preempt": {
+        "cmd": "preempt",
+        "metrics": [
+            # chunked prefill + priority preemption must not change greedy
+            # outputs; the p99 inter-token gap and the priority request's
+            # first-token wait must improve (within-run on/off ratios);
+            # swap traffic moves the packed state and conserves exactly.
+            # itl_p99_reduction and the *_s quantiles are recorded, never
+            # gated (run-to-run window timing noise); itl_p99_pass holds
+            # the fixed >=1.25x tail-reduction bound.
+            (("bit_identical",), "true"),
+            (("itl_p99_pass",), "true"),
+            (("priority_wait_reduction",), "higher"),
+            (("preemptions",), "higher"),
+            (("swap_conserved",), "true"),
+            (("swap_out_bytes",), "lower"),
         ],
     },
     "obs": {
