@@ -1,0 +1,266 @@
+"""Open-loop goodput harness: Poisson arrivals through the HTTP front-end.
+
+Sweeps offered load (requests/s) with a *seeded open-loop* arrival process
+— clients fire on an exponential inter-arrival schedule regardless of how
+fast the server drains, the load-testing regime where queueing delay and
+SLO misses actually show up (closed-loop harnesses self-throttle and hide
+them). Every request is streamed over HTTP (``POST /generate`` chunked
+NDJSON) against ``launch/serve.py --serve-http``'s exact serving stack:
+``EngineService`` mailbox -> continuous scheduler service mode -> per-token
+events back through asyncio.
+
+Per load point it reports client-observed p50/p99 TTFT and inter-token
+gaps, server-side SLO attainment and goodput (tokens/s from SLO-meeting
+requests only, ``EngineMetrics.slo_summary()``), producing the
+goodput-vs-offered-load curve. Gated results (``tools/check_bench.py``):
+
+* **frontend_bit_identical** — greedy token streams through the HTTP
+  front-end match a direct ``engine.generate`` run of the same requests
+  bit-for-bit, and every ``done`` record equals its streamed token
+  sequence (no loss/reorder across the thread/asyncio bridge).
+* **endpoints_valid** — mid-load ``GET /metrics`` (Prometheus), ``/stats``
+  (schema-versioned sliding-window snapshot) and ``/healthz`` all parse
+  and validate (``validate_timeseries_snapshot``).
+* **nonsync_bytes_per_step == 0** — serving over HTTP with full
+  observability adds no host traffic between sync points.
+* **slo_attainment_low_load** — at the lowest offered load every request
+  meets the (generous) smoke SLO; wall-clock quantiles are recorded but
+  never gated.
+
+    PYTHONPATH=src python benchmarks/openloop_load.py [--smoke]
+
+Writes ``BENCH_openloop.json`` (schema: _common.bench_json).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.configs.base import FreeKVConfig  # noqa: E402
+from repro.models.model import init_params  # noqa: E402
+from repro.obs import Observability, validate_timeseries_snapshot  # noqa: E402
+from repro.serving.engine import Request, ServeEngine  # noqa: E402
+from repro.serving.frontend import (EngineService,  # noqa: E402
+                                    http_generate, http_get_json,
+                                    http_get_text, serve_http_background)
+from repro.serving.sampling import SamplerConfig  # noqa: E402
+
+SMOKE = dict(arch="granite-3-8b-smoke", context=64, slots=2, new_tokens=16,
+             requests=6, loads=(2.0, 8.0, 32.0), page_size=8, budget=48,
+             slo_ttft_ms=60_000.0, slo_itl_ms=10_000.0)
+FULL = dict(arch="granite-3-8b-smoke", context=256, slots=4, new_tokens=48,
+            requests=16, loads=(1.0, 4.0, 16.0), page_size=16, budget=96,
+            slo_ttft_ms=60_000.0, slo_itl_ms=10_000.0)
+
+
+def make_requests(cfg, context, n, new_tokens, seed):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        context).astype(np.int32),
+                    max_new_tokens=new_tokens)
+            for i in range(n)]
+
+
+def _pct(vals, q):
+    return float(np.percentile(vals, q)) if len(vals) else 0.0
+
+
+class _Client(threading.Thread):
+    """One open-loop request: stream /generate, record event recv times."""
+
+    def __init__(self, port, req, slo_ttft_ms, slo_itl_ms):
+        super().__init__(daemon=True)
+        self.port, self.req = port, req
+        self.payload = {"tokens": [int(t) for t in req.tokens],
+                        "max_new_tokens": req.max_new_tokens,
+                        "uid": req.uid, "slo_ttft_ms": slo_ttft_ms,
+                        "slo_itl_ms": slo_itl_ms}
+        self.recv_t: list = []          # client-side token arrival times
+        self.tokens: list = []          # streamed token values, in order
+        self.done: dict = {}
+        self.t_post = 0.0
+        self.error = None
+
+    def run(self):
+        try:
+            self.t_post = time.perf_counter()
+            for ev in http_generate("127.0.0.1", self.port, self.payload):
+                if ev.get("event") == "token":
+                    self.recv_t.append(time.perf_counter())
+                    self.tokens.append(ev["token"])
+                elif ev.get("event") == "done":
+                    self.done = ev
+                elif ev.get("event") == "error":   # pragma: no cover
+                    self.error = ev
+        except Exception as e:          # pragma: no cover - harness bug
+            self.error = e
+
+
+def _check_endpoints(port, svc):
+    """Hit /healthz + /metrics + /stats mid-load; returns list of errors."""
+    errs = []
+    deadline = time.time() + 30.0
+    while time.time() < deadline:       # wait for the scheduler to attach
+        if svc.em is not None and svc.em.steps > 0:
+            break
+        time.sleep(0.005)
+    st, health = http_get_json("127.0.0.1", port, "/healthz")
+    if st != 200 or not health.get("ok") or not health.get("engine_running"):
+        errs.append(f"/healthz unhealthy under load: {st} {health}")
+    st, prom = http_get_text("127.0.0.1", port, "/metrics")
+    if st != 200 or "# TYPE" not in prom:
+        errs.append(f"/metrics not a Prometheus exposition: {st}")
+    st, stats = http_get_json("127.0.0.1", port, "/stats")
+    if st != 200:
+        errs.append(f"/stats -> {st}")
+    else:
+        errs.extend(f"/stats: {e}"
+                    for e in validate_timeseries_snapshot(stats))
+    return errs
+
+
+def run_point(eng, reqs, rps, slo_ttft_ms, slo_itl_ms, seed):
+    """One offered-load point: fresh service + HTTP server, Poisson
+    arrivals, client-observed latencies + server-side SLO summary."""
+    svc = EngineService(eng, seed=0).start()
+    fe, stop, th = serve_http_background(svc)
+    arrivals = np.random.default_rng(seed).exponential(
+        1.0 / rps, len(reqs)).cumsum()
+    clients = [_Client(fe.port, r, slo_ttft_ms, slo_itl_ms) for r in reqs]
+    endpoint_errs = None
+    try:
+        t0 = time.perf_counter()
+        for i, c in enumerate(clients):
+            delay = t0 + arrivals[i] - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            c.start()
+            if endpoint_errs is None and i >= len(clients) // 2:
+                endpoint_errs = _check_endpoints(fe.port, svc)
+        for c in clients:
+            c.join(timeout=600.0)
+        wall = time.perf_counter() - t0
+    finally:
+        stop.set()
+        th.join(timeout=30.0)
+        svc.stop()
+    em = eng.last_metrics
+    for c in clients:
+        if c.error is not None:
+            raise RuntimeError(f"client uid={c.req.uid} failed: {c.error}")
+    ttft = [c.recv_t[0] - c.t_post for c in clients if c.recv_t]
+    itl = [g for c in clients
+           for g in np.diff(c.recv_t)] if clients else []
+    slo = em.slo_summary()
+    d = em.summary()["dispatch"]
+    point = {
+        "offered_rps": rps,
+        "completed": len([c for c in clients if c.done]),
+        "wall_s": wall,
+        "tokens_per_s": sum(len(c.tokens) for c in clients) / max(wall, 1e-9),
+        "ttft_p50_s": _pct(ttft, 50), "ttft_p99_s": _pct(ttft, 99),
+        "itl_p50_s": _pct(itl, 50), "itl_p99_s": _pct(itl, 99),
+        "slo_attainment": slo["attainment"],
+        "goodput_tokens_per_s": slo["goodput_tokens_per_s"],
+        "nonsync_bytes_per_step": d["nonsync_bytes_per_step"],
+        "endpoint_errors": endpoint_errs or [],
+    }
+    streamed = {c.req.uid: list(c.tokens) for c in clients}
+    done_match = all(c.done.get("tokens") == c.tokens for c in clients)
+    return point, streamed, done_match
+
+
+def run(arch, context, slots, new_tokens, requests, loads, page_size,
+        budget, slo_ttft_ms, slo_itl_ms, quiet=False):
+    cfg = get_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    fkv = FreeKVConfig(method="freekv", page_size=page_size, budget=budget,
+                       n_sink=page_size, n_window=page_size, tau=0.8,
+                       sync_interval=8)
+    eng = ServeEngine(cfg, fkv, params,
+                      max_len=context + new_tokens + page_size + 64,
+                      batch_size=slots,
+                      sampler=SamplerConfig(temperature=0.0),
+                      scheduler="continuous", obs=Observability.full(),
+                      slo_ttft_ms=slo_ttft_ms, slo_itl_ms=slo_itl_ms)
+
+    # per-point request sets; the first doubles as the warmup batch AND the
+    # direct-engine reference for the frontend bit-identity gate
+    req_sets = [make_requests(cfg, context, requests, new_tokens,
+                              seed=100 + i) for i in range(len(loads))]
+    direct = {out.uid: [int(t) for t in out.tokens]
+              for out in eng.generate(req_sets[0], seed=0)}
+
+    points, bit_identical, dones_match, ep_errs = {}, True, True, []
+    for i, rps in enumerate(loads):
+        point, streamed, done_ok = run_point(
+            eng, req_sets[i], rps, slo_ttft_ms, slo_itl_ms, seed=7 + i)
+        points[f"rps={rps:g}"] = point
+        dones_match = dones_match and done_ok
+        ep_errs.extend(point["endpoint_errors"])
+        if i == 0:
+            bit_identical = streamed == direct
+        if not quiet:
+            print(f"  rps={rps:6.1f} tok/s={point['tokens_per_s']:7.2f} "
+                  f"ttft p50/p99={point['ttft_p50_s']*1e3:6.1f}/"
+                  f"{point['ttft_p99_s']*1e3:6.1f} ms "
+                  f"itl p99={point['itl_p99_s']*1e3:6.1f} ms "
+                  f"slo={point['slo_attainment']:.0%} "
+                  f"goodput={point['goodput_tokens_per_s']:7.2f} tok/s")
+    if ep_errs and not quiet:
+        print(f"  endpoint errors: {ep_errs[:5]}")
+
+    pts = list(points.values())
+    metrics = {
+        "frontend_bit_identical": bit_identical and dones_match,
+        "endpoints_valid": not ep_errs,
+        "completed_all": all(p["completed"] == requests for p in pts),
+        "nonsync_bytes_per_step": max(p["nonsync_bytes_per_step"]
+                                      for p in pts),
+        "slo_attainment_low_load": pts[0]["slo_attainment"],
+        "load_points": len(pts),
+        "points": points,
+    }
+    return metrics
+
+
+def main():
+    from _common import bench_json
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep — still writes BENCH_openloop.json")
+    ap.add_argument("--no-json", action="store_true")
+    args = ap.parse_args()
+    config = dict(SMOKE) if args.smoke else dict(FULL)
+    print("== open-loop goodput vs offered load (HTTP front-end) ==")
+    res = run(**config)
+    ok = (res["frontend_bit_identical"] and res["endpoints_valid"]
+          and res["completed_all"] and res["nonsync_bytes_per_step"] == 0
+          and res["slo_attainment_low_load"] == 1.0)
+    print(f"frontend_bit_identical={res['frontend_bit_identical']} "
+          f"endpoints_valid={res['endpoints_valid']} "
+          f"completed_all={res['completed_all']} "
+          f"nonsync_B/step={res['nonsync_bytes_per_step']:.1f} "
+          f"slo_attainment_low_load={res['slo_attainment_low_load']:.0%} "
+          f"[{'PASS' if ok else 'FAIL'}]")
+    if not args.no_json:
+        config["loads"] = list(config["loads"])
+        bench_json("openloop", config, res)
+    if not ok:
+        sys.exit(1)
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -26,13 +26,20 @@ def main():
     ap.add_argument("--kv-quant", choices=("none", "int8", "int4"),
                     default="none",
                     help="quantized host KV tier for the offloaded pool")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="tag requests with a TTFT SLO (ms); prints the "
+                         "attainment + goodput line from summary()['slo']")
+    ap.add_argument("--slo-itl-ms", type=float, default=None,
+                    help="mean inter-token-latency SLO (ms)")
     args = ap.parse_args()
 
     cfg = get_config("smollm-360m-smoke")          # reduced llama-style model
     params = init_params(cfg, jax.random.PRNGKey(0))
     fkv = FreeKVConfig(method="freekv", page_size=8, budget=64, n_sink=8,
                        n_window=8, tau=0.8, kv_quant=args.kv_quant)
-    engine = ServeEngine(cfg, fkv, params, max_len=256, batch_size=2)
+    engine = ServeEngine(cfg, fkv, params, max_len=256, batch_size=2,
+                         slo_ttft_ms=args.slo_ttft_ms,
+                         slo_itl_ms=args.slo_itl_ms)
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, 80).astype(np.int32)
@@ -50,6 +57,12 @@ def main():
         print(f"kv_quant={kq['mode']}: block {kq['dense_block_bytes']} -> "
               f"{kq['page_block_bytes']} B, saved {kq['bytes_saved']:.0f} B "
               f"transfer, pool compression {kq['pool_compression']:.2f}x")
+    slo = engine.last_metrics.slo_summary()
+    if slo["tagged"]:
+        print(f"SLO (ttft<={slo['ttft_ms']}ms, itl<={slo['itl_ms']}ms): "
+              f"{slo['attained']}/{slo['tagged']} attained "
+              f"({slo['attainment']:.1%}), goodput "
+              f"{slo['goodput_tokens_per_s']:.1f} tok/s")
 
 
 if __name__ == "__main__":

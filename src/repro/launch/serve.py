@@ -97,6 +97,23 @@ def main():
     ap.add_argument("--no-obs", action="store_true",
                     help="disable per-step observability histograms/spans "
                          "(registry counters always run)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="engine-level TTFT SLO (ms): completed requests "
+                         "are tagged and summary()['slo'] reports "
+                         "attainment + goodput (tokens/s from SLO-meeting "
+                         "requests)")
+    ap.add_argument("--slo-itl-ms", type=float, default=None,
+                    help="engine-level mean inter-token-latency SLO (ms)")
+    ap.add_argument("--serve-http", action="store_true",
+                    help="serve the async streaming HTTP front-end instead "
+                         "of running a fixed batch: POST /generate (chunked "
+                         "NDJSON token stream), GET /metrics (Prometheus), "
+                         "GET /stats (sliding-window time series), "
+                         "GET /healthz. Ctrl-C to stop.")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="HTTP front-end bind address (--serve-http)")
+    ap.add_argument("--port", type=int, default=8008,
+                    help="HTTP front-end port (--serve-http; 0 = ephemeral)")
     args = ap.parse_args()
 
     if args.tp > 1 and "--xla_force_host_platform_device_count" not in \
@@ -119,9 +136,15 @@ def main():
                        prefill_chunk_tokens=args.prefill_chunk,
                        preempt=args.preempt,
                        kernel_interpret=args.kernel_interpret)
-    obs = (Observability.off() if args.no_obs else
-           Observability(enabled=True,
-                         trace=TraceRecorder(enabled=bool(args.trace_out))))
+    if args.no_obs:
+        obs = Observability.off()
+    else:
+        from repro.obs import TimeSeriesBoard
+        obs = Observability(
+            enabled=True,
+            trace=TraceRecorder(enabled=bool(args.trace_out)),
+            # the HTTP front-end serves the windowed series at /stats
+            timeseries=TimeSeriesBoard() if args.serve_http else None)
     eng = ServeEngine(cfg, fkv, params,
                       max_len=args.context + args.new_tokens + args.page_size
                       + args.prefill_bucket,
@@ -130,7 +153,27 @@ def main():
                       scheduler=args.scheduler,
                       prefill_bucket=args.prefill_bucket,
                       prefix_cache_tokens=args.prefix_cache_tokens,
-                      tp=args.tp, obs=obs)
+                      tp=args.tp, obs=obs,
+                      slo_ttft_ms=args.slo_ttft_ms,
+                      slo_itl_ms=args.slo_itl_ms)
+
+    if args.serve_http:
+        from repro.serving.frontend import (EngineService, HttpFrontend,
+                                            run_http_frontend)
+        svc = EngineService(eng, seed=0).start()
+        fe = HttpFrontend(svc, args.host, args.port)
+        print(f"serving {args.arch}/{args.method} on "
+              f"http://{args.host}:{args.port} "
+              "(POST /generate, GET /metrics /stats /healthz)")
+        try:
+            run_http_frontend(svc, args.host, args.port, frontend=fe)
+        finally:
+            svc.stop()
+            em = eng.last_metrics
+            if em is not None:
+                _finish_run(args, em, obs)
+        return
+
     n_req = args.requests or args.batch
     stream = needle_stream(cfg.vocab_size, args.context, args.page_size)
     reqs = [Request(uid=i, tokens=next(stream).tokens,
@@ -143,17 +186,29 @@ def main():
               f"corr_rate {out.stats.get('correction_rate', 0):.3f}")
     em = eng.last_metrics
     if em is not None:
-        print(json.dumps(em.summary(), indent=2, default=str))
-        if args.metrics_out:
-            em.registry.write_jsonl(args.metrics_out,
-                                    extra={"arch": args.arch,
-                                           "method": args.method,
-                                           "tp": args.tp})
-            print(f"metrics snapshot appended to {args.metrics_out}")
-        if args.prom_out:
-            with open(args.prom_out, "w", encoding="utf-8") as f:
-                f.write(em.registry.to_prometheus())
-            print(f"prometheus exposition written to {args.prom_out}")
+        _finish_run(args, em, obs)
+
+
+def _finish_run(args, em, obs):
+    """End-of-run reporting shared by batch mode and --serve-http."""
+    print(json.dumps(em.summary(), indent=2, default=str))
+    slo = em.slo_summary()
+    if slo["tagged"]:
+        print(f"SLO (ttft<={slo['ttft_ms']}ms, itl<={slo['itl_ms']}ms): "
+              f"{slo['attained']}/{slo['tagged']} attained "
+              f"({slo['attainment']:.1%}) | goodput "
+              f"{slo['goodput_tokens_per_s']:.1f} tok/s "
+              f"(total {em.tokens_per_s:.1f} tok/s)")
+    if args.metrics_out:
+        em.registry.write_jsonl(args.metrics_out,
+                                extra={"arch": args.arch,
+                                       "method": args.method,
+                                       "tp": args.tp})
+        print(f"metrics snapshot appended to {args.metrics_out}")
+    if args.prom_out:
+        with open(args.prom_out, "w", encoding="utf-8") as f:
+            f.write(em.registry.to_prometheus())
+        print(f"prometheus exposition written to {args.prom_out}")
     if args.trace_out and obs.trace.enabled:
         obs.trace.write(args.trace_out)
         print(f"trace written to {args.trace_out} "

@@ -34,6 +34,14 @@ from repro.obs.registry import (  # noqa: F401  (re-exports)
     exponential_buckets,
     linear_buckets,
 )
+from repro.obs.timeseries import (  # noqa: F401
+    DEFAULT_WINDOW_S,
+    TIMESERIES_SCHEMA_VERSION,
+    TimeSeriesBoard,
+    WindowRate,
+    WindowStat,
+    validate_timeseries_snapshot,
+)
 from repro.obs.trace import (  # noqa: F401
     SPAN_ATTN_COMPUTE,
     SPAN_DECODE_STEP,
@@ -61,12 +69,17 @@ class Observability:
     (the registry-backed counters in ``EngineMetrics`` always run — they
     replace the old dataclass fields and cost the same). ``trace`` is
     the span recorder; construct with ``TraceRecorder(enabled=False)``
-    to keep lifecycle spans off.
+    to keep lifecycle spans off. ``timeseries`` is the optional
+    sliding-window board (``repro.obs.timeseries``) the scheduler feeds
+    rolling TTFT/ITL/tokens-per-s/occupancy series into — the payload the
+    HTTP front-end serves live at ``/stats``; ``None`` (the default)
+    skips all windowed work.
     """
 
     enabled: bool = True
     trace: TraceRecorder = field(
         default_factory=lambda: TraceRecorder(enabled=False))
+    timeseries: "TimeSeriesBoard | None" = None
 
     @classmethod
     def off(cls) -> "Observability":
@@ -74,7 +87,8 @@ class Observability:
 
     @classmethod
     def full(cls) -> "Observability":
-        return cls(enabled=True, trace=TraceRecorder(enabled=True))
+        return cls(enabled=True, trace=TraceRecorder(enabled=True),
+                   timeseries=TimeSeriesBoard())
 
 
 def validate_snapshot(snap: dict) -> list:

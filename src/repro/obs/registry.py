@@ -32,6 +32,7 @@ import bisect
 import json
 import math
 import re
+import threading
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -182,38 +183,58 @@ class Histogram:
 
 
 class MetricsRegistry:
-    """Name -> metric map with get-or-create accessors and two exporters."""
+    """Name -> metric map with get-or-create accessors and two exporters.
+
+    Live-scrape safe: metric *creation* and the exporters take a lock, so
+    the HTTP front-end can render ``/metrics`` while the scheduler thread
+    registers new series. The hot path (inc/observe on an existing metric,
+    reached via a plain dict ``get``) stays lock-free."""
 
     def __init__(self):
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._histograms: Dict[str, Histogram] = {}
+        self._lock = threading.Lock()
 
     # -- get-or-create -------------------------------------------------
     def counter(self, name: str, help: str = "") -> Counter:
         c = self._counters.get(name)
         if c is None:
-            c = self._counters[name] = Counter(name, help)
+            with self._lock:
+                c = self._counters.get(name)
+                if c is None:
+                    c = self._counters[name] = Counter(name, help)
         return c
 
     def gauge(self, name: str, help: str = "") -> Gauge:
         g = self._gauges.get(name)
         if g is None:
-            g = self._gauges[name] = Gauge(name, help)
+            with self._lock:
+                g = self._gauges.get(name)
+                if g is None:
+                    g = self._gauges[name] = Gauge(name, help)
         return g
 
     def histogram(self, name: str, buckets: Optional[Sequence[float]] = None,
                   help: str = "") -> Histogram:
         h = self._histograms.get(name)
         if h is None:
-            h = self._histograms[name] = Histogram(
-                name, buckets if buckets is not None else LATENCY_BUCKETS,
-                help)
+            with self._lock:
+                h = self._histograms.get(name)
+                if h is None:
+                    h = self._histograms[name] = Histogram(
+                        name,
+                        buckets if buckets is not None else LATENCY_BUCKETS,
+                        help)
         return h
 
     # -- exporters -----------------------------------------------------
     def snapshot(self, extra: Optional[dict] = None) -> dict:
         """Stable JSON-able view (schema checked by tools/check_obs.py)."""
+        with self._lock:
+            return self._snapshot_locked(extra)
+
+    def _snapshot_locked(self, extra: Optional[dict] = None) -> dict:
         snap = {
             "schema_version": SNAPSHOT_SCHEMA_VERSION,
             "unix_time": time.time(),
@@ -240,6 +261,10 @@ class MetricsRegistry:
     def to_prometheus(self) -> str:
         """Prometheus text exposition (0.0.4): counters, gauges, and
         histograms with cumulative ``le`` buckets."""
+        with self._lock:
+            return self._to_prometheus_locked()
+
+    def _to_prometheus_locked(self) -> str:
         out: List[str] = []
         for n, c in sorted(self._counters.items()):
             pn = _prom_name(n)

@@ -50,6 +50,7 @@ SPAN_DECODE_STEP = "engine/decode_step"
 SPAN_PREFILL_CHUNK = "engine/prefill_chunk"
 SPAN_SCHED_PREEMPT = "sched/preempt"
 SPAN_SCHED_RESUME = "sched/resume"
+SPAN_SCHED_CANCEL = "sched/cancel"
 SPAN_RECALL_SELECT = "recall/select"
 SPAN_RECALL_CORRECTION = "recall/correction"
 SPAN_RECALL_TOPUP = "recall/topup"

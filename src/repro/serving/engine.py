@@ -74,6 +74,11 @@ class Request:
     # the lowest-priority running request's swaps that victim's paged KV out
     # to host and takes its slot; the victim resumes bit-identically later.
     priority: int = 0
+    # per-request SLO tags (ms); None falls back to the engine-level default.
+    # Tagged completions feed EngineMetrics.summary()["slo"] (attainment +
+    # goodput); tags never influence scheduling decisions.
+    slo_ttft_ms: Optional[float] = None
+    slo_itl_ms: Optional[float] = None
 
 
 @dataclass
@@ -185,7 +190,9 @@ class ServeEngine:
                  prefix_cache_tokens: int = 0,
                  pad_token: int = 0,
                  tp: int = 1,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 slo_ttft_ms: Optional[float] = None,
+                 slo_itl_ms: Optional[float] = None):
         assert scheduler in ("continuous", "static"), scheduler
         if tp > 1:
             # tensor-parallel serving: KV-head-group sharding over a 1-D
@@ -268,6 +275,11 @@ class ServeEngine:
         # sync boundaries only. Default off — the registry-backed counters
         # in EngineMetrics always run; this gates the extra distributions.
         self.obs = obs if obs is not None else Observability.off()
+        # engine-level SLO defaults (ms): requests without their own tags
+        # inherit these; None leaves the request untagged (see
+        # EngineMetrics.slo_check / summary()["slo"]).
+        self.slo_ttft_ms = slo_ttft_ms
+        self.slo_itl_ms = slo_itl_ms
         # per-slot in-flight staged recall accounting (core/recall_pipeline);
         # the continuous scheduler feeds it each step and invalidates on
         # slot turnover. Reset per generate() run. Under TP it is fed global
@@ -462,14 +474,16 @@ class ServeEngine:
         self.last_metrics = em
         return out
 
-    def _generate_continuous(self, requests, seed):
+    def _generate_continuous(self, requests, seed, service=None):
+        assert self.scheduler == "continuous", \
+            "live serving needs scheduler='continuous'"
         if self._pool is None:
             self._pool = self.make_slot_pool(self.batch_size)
         else:
             self._pool.reset_all()
         self.recall_tracker = RecallFlightTracker(shards=self.tp)
         sched = ContinuousScheduler(self, self._pool)
-        tracked, em = sched.run(requests, seed)
+        tracked, em = sched.run(requests, seed, service=service)
         from repro.core.offload import pool_on_host
         em.transfer_is_dma = pool_on_host(self._pool.state)
         self._apply_quant_metrics(em)
@@ -481,6 +495,15 @@ class ServeEngine:
                            steps=max(len(tr.tokens) - 1, 0),
                            stats=_request_stats(tr.agg), metrics=tr.metrics)
                 for tr in tracked]
+
+    def serve_service(self, service, seed: int = 0) -> List[Completion]:
+        """Live-serving entry point: drive the continuous scheduler off a
+        ``serving/frontend.EngineService`` inbox (dynamic admission,
+        streaming per-token events, client-disconnect cancellation) until
+        the service closes and drains. Blocking — the front-end runs it on
+        a dedicated worker thread. Returns all completions (including
+        cancelled requests' partial records) in admission order."""
+        return self._generate_continuous([], seed, service=service)
 
     # -- static chunked fallback ---------------------------------------
     def _generate_batch(self, reqs: List[Request], seed: int) -> List[Completion]:

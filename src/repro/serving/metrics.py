@@ -46,6 +46,11 @@ class RequestMetrics:
     priority: int = 0
     preemptions: int = 0              # times this request was swapped out
     max_token_gap_s: float = 0.0      # worst observed inter-token gap
+    cancelled: bool = False           # client-cancelled mid-flight
+    # per-request SLO tags (milliseconds); None inherits the engine-level
+    # defaults (EngineMetrics.slo_ttft_ms / slo_itl_ms)
+    slo_ttft_ms: Optional[float] = None
+    slo_itl_ms: Optional[float] = None
 
     @property
     def queue_wait_s(self) -> Optional[float]:
@@ -116,6 +121,15 @@ _COUNTER_ATTRS = {
                        "decode-state bytes pulled to host at preemption"),
     "swap_in_bytes": ("sched_swap_in_bytes_total", float,
                       "decode-state bytes pushed back at resume"),
+    "cancellations": ("sched_cancellations_total", int,
+                      "requests cancelled mid-flight (client disconnect)"),
+    "slo_tagged": ("slo_tagged_requests_total", int,
+                   "completed requests carrying an effective SLO tag"),
+    "slo_attained": ("slo_attained_requests_total", int,
+                     "tagged requests meeting their TTFT+ITL SLOs"),
+    "slo_good_tokens": ("slo_good_tokens_total", int,
+                        "tokens from SLO-attaining requests (goodput "
+                        "numerator)"),
 }
 _GAUGE_ATTRS = {
     "dropped_pages": ("recall_dropped_in_flight_pages", float,
@@ -173,6 +187,11 @@ class EngineMetrics:
     # reference path (sample_on_device=False) syncs every step.
     sync_interval: int = 1
     sample_on_device: bool = True
+    # engine-level SLO defaults (milliseconds; None = untagged). A request
+    # whose RequestMetrics carries its own tag overrides these; requests
+    # with NO effective tag are excluded from attainment/goodput.
+    slo_ttft_ms: Optional[float] = None
+    slo_itl_ms: Optional[float] = None
 
     # -- recording helpers ----------------------------------------------
     def record_step(self, n_active: int):
@@ -214,11 +233,41 @@ class EngineMetrics:
                           "per-step corrected-head fraction").observe(
                               corrected / kv_heads)
 
+    def slo_check(self, rm: RequestMetrics):
+        """Effective-SLO verdict for one finished request.
+
+        Returns (tagged, attained): ``tagged`` iff the request carries an
+        effective TTFT or ITL SLO (its own tag, else the engine default);
+        ``attained`` iff every effective bound holds — TTFT against
+        ``rm.ttft_s``, ITL against the request's *mean* inter-token latency
+        (``rm.itl_s``; single-token requests have no ITL and pass that
+        bound vacuously)."""
+        t_slo = rm.slo_ttft_ms if rm.slo_ttft_ms is not None \
+            else self.slo_ttft_ms
+        i_slo = rm.slo_itl_ms if rm.slo_itl_ms is not None \
+            else self.slo_itl_ms
+        if t_slo is None and i_slo is None:
+            return False, False
+        ok = True
+        if t_slo is not None and (rm.ttft_s is None
+                                  or rm.ttft_s * 1e3 > t_slo):
+            ok = False
+        if i_slo is not None and rm.itl_s is not None \
+                and rm.itl_s * 1e3 > i_slo:
+            ok = False
+        return True, ok
+
     def record_request(self, rm: RequestMetrics):
         """Observe a finished request's latency distributions."""
         reg = self.registry
         reg.counter("requests_completed_total").inc()
         reg.counter("request_tokens_generated_total").inc(rm.new_tokens)
+        tagged, attained = self.slo_check(rm)
+        if tagged:
+            self.slo_tagged += 1
+            if attained:
+                self.slo_attained += 1
+                self.slo_good_tokens += rm.new_tokens
         if rm.queue_wait_s is not None:
             reg.histogram(H_QUEUE_WAIT, LATENCY_BUCKETS,
                           "enqueue -> prefill start").observe(rm.queue_wait_s)
@@ -339,15 +388,44 @@ class EngineMetrics:
         return (self.corrected_heads / self.kv_head_steps
                 if self.kv_head_steps else 0.0)
 
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of SLO-tagged completed requests meeting their SLOs
+        (1.0 with no tagged traffic — nothing violated)."""
+        return self.slo_attained / self.slo_tagged if self.slo_tagged else 1.0
+
+    @property
+    def goodput_tokens_per_s(self) -> float:
+        """Tokens/s counting ONLY tokens from SLO-attaining requests — the
+        serving metric the open-loop harness sweeps vs offered load. With
+        no tagged traffic this equals plain tokens_per_s."""
+        good = (self.slo_good_tokens if self.slo_tagged
+                else self.generated_tokens)
+        return good / self.wall_s if self.wall_s else 0.0
+
+    def slo_summary(self) -> dict:
+        return {
+            "ttft_ms": self.slo_ttft_ms,
+            "itl_ms": self.slo_itl_ms,
+            "tagged": self.slo_tagged,
+            "attained": self.slo_attained,
+            "attainment": self.slo_attainment,
+            "good_tokens": self.slo_good_tokens,
+            "goodput_tokens_per_s": self.goodput_tokens_per_s,
+            "cancelled": self.cancellations,
+        }
+
     def _hist_summary(self, name: str, buckets) -> dict:
         return self.registry.histogram(name, buckets).summary()
 
     def summary(self) -> dict:
-        done = [r for r in self.requests if r.finish_t is not None]
+        done = [r for r in self.requests
+                if r.finish_t is not None and not r.cancelled]
         return {
             "scheduler": self.scheduler,
             "requests": len(self.requests),
             "completed": len(done),
+            "cancelled": self.cancellations,
             "generated_tokens": self.generated_tokens,
             "wall_s": self.wall_s,
             "tokens_per_s": self.tokens_per_s,
@@ -359,6 +437,7 @@ class EngineMetrics:
                                   if r.ttft_s is not None]),
             "itl_s_mean": _mean([r.itl_s for r in done
                                  if r.itl_s is not None]),
+            "slo": self.slo_summary(),
             "latency": {
                 "queue_wait_s": self._hist_summary(H_QUEUE_WAIT,
                                                    LATENCY_BUCKETS),

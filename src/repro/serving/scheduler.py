@@ -75,8 +75,8 @@ from repro.core.recall_pipeline import RecallFlightTracker
 from repro.models.model import DECODE_STAT_KEYS as _STAT_KEYS
 from repro.obs import Observability
 from repro.obs.trace import (SPAN_DECODE_STEP, SPAN_DECODE_WINDOW,
-                             SPAN_PREFILL_CHUNK, SPAN_SCHED_PREEMPT,
-                             SPAN_SCHED_RESUME)
+                             SPAN_PREFILL_CHUNK, SPAN_SCHED_CANCEL,
+                             SPAN_SCHED_PREEMPT, SPAN_SCHED_RESUME)
 from repro.serving.metrics import EngineMetrics, RequestMetrics
 from repro.serving.sampling import request_key
 
@@ -85,9 +85,11 @@ from repro.serving.sampling import request_key
 _PAGE_KEYS = ("sync_pages", "async_pages", "reused_pages", "sel_pages",
               "spec_hit_pages", "churn_pages")
 
-# request lifecycle states (SWAPPED = preempted, paged KV parked on host)
+# request lifecycle states (SWAPPED = preempted, paged KV parked on host;
+# CANCELLED = terminal, client abandoned the request mid-flight)
 QUEUED, PREFILL, DECODE, DONE = "queued", "prefill", "decode", "done"
 SWAPPED = "swapped"
+CANCELLED = "cancelled"
 
 
 def _prio(tr: "_Tracked") -> int:
@@ -191,32 +193,59 @@ class ContinuousScheduler:
         self.backend = backend
         self.pool = pool
 
-    def run(self, requests, seed: int = 0):
-        """Returns (tracked records in submission order, EngineMetrics)."""
+    def run(self, requests, seed: int = 0, service=None):
+        """Returns (tracked records in submission order, EngineMetrics).
+
+        ``service`` (optional) switches the scheduler into live-serving
+        mode: each host round drains ``service.poll()`` into the admission
+        queue and ``service.drain_cancels()`` into the cancellation pass,
+        per-token/terminal events stream back via ``service.emit_token`` /
+        ``service.emit_finish``, and the run ends only once the service is
+        ``closed`` and drained (see ``serving/frontend.EngineService``).
+        """
         backend, pool = self.backend, self.pool
         on_device = (bool(getattr(backend, "sample_on_device", False))
                      and hasattr(backend, "decode_window"))
         obs = getattr(backend, "obs", None) or Observability.off()
         self._obs, self._trace = obs, obs.trace
+        board = obs.timeseries          # None -> no windowed aggregation
         self._page_block_bytes = backend.page_block_bytes
         t0 = time.perf_counter()
         self._t0 = t0
         now = lambda: time.perf_counter() - t0  # noqa: E731
+        abst = lambda rel: t0 + rel             # noqa: E731  (board clock)
 
         queue: deque = deque()
-        for i, r in enumerate(requests):
+        by_uid: Dict[int, _Tracked] = {}
+        next_order = 0
+
+        def track(r) -> _Tracked:
+            nonlocal next_order
             rm = RequestMetrics(uid=r.uid, prompt_tokens=len(r.tokens),
                                 max_new_tokens=r.max_new_tokens,
                                 priority=getattr(r, "priority", 0),
-                                enqueue_t=now())
-            queue.append(_Tracked(req=r, order=i, metrics=rm))
+                                enqueue_t=now(),
+                                slo_ttft_ms=getattr(r, "slo_ttft_ms", None),
+                                slo_itl_ms=getattr(r, "slo_itl_ms", None))
+            tr = _Tracked(req=r, order=next_order, metrics=rm)
+            next_order += 1
+            by_uid[r.uid] = tr
+            return tr
+
+        for r in requests:
+            queue.append(track(r))
 
         em = EngineMetrics(num_slots=pool.num_slots, scheduler="continuous",
                            page_block_bytes=backend.page_block_bytes,
                            tp=getattr(backend, "tp", 1),
                            sync_interval=(getattr(backend, "sync_interval", 1)
                                           if on_device else 1),
-                           sample_on_device=on_device)
+                           sample_on_device=on_device,
+                           slo_ttft_ms=getattr(backend, "slo_ttft_ms", None),
+                           slo_itl_ms=getattr(backend, "slo_itl_ms", None))
+        svc = service
+        if svc is not None:
+            svc.attach(em, t0)
         # per-slot in-flight staged recall: the double buffer a slot carries
         # out of step t is consumed by step t+1 unless the slot turns over
         flight = getattr(backend, "recall_tracker", None) \
@@ -245,6 +274,61 @@ class ContinuousScheduler:
                 flight.invalidate(slot)   # staged buffer abandoned in flight
                 pool.free(slot)
                 lanes.retire(slot)
+            if board is not None:
+                board.event("completions", 1.0, abst(tr.metrics.finish_t))
+            if svc is not None:
+                svc.emit_finish(tr.req.uid, tr)
+
+        def cancel_pass(uids):
+            """Terminal CANCELLED path (client disconnect): release the
+            slot, drop in-flight staged recall, park nothing — surviving
+            requests never observe the cancellation (their lanes, key
+            streams and paged KV are untouched, so outputs stay
+            bit-identical). Cancelled requests are excluded from
+            ``completed`` / latency / SLO accounting."""
+            for uid in uids:
+                tr = by_uid.get(uid)
+                if tr is None or tr.state in (DONE, CANCELLED):
+                    continue
+                slot = tr.slot if tr.slot >= 0 else None
+                if tr.state in (QUEUED, SWAPPED):
+                    try:
+                        queue.remove(tr)
+                    except ValueError:      # pragma: no cover - defensive
+                        pass
+                    tr.host_state = None    # parked KV dropped with the req
+                    tr.flight_pages = 0.0
+                elif tr.state == PREFILL and slot is not None \
+                        and slot in prefilling:
+                    del prefilling[slot]
+                    tr.job = None
+                    pool.free(slot)
+                    lanes.retire(slot)
+                elif tr.state == DECODE and slot is not None \
+                        and slot in active:
+                    del active[slot]
+                    flight.invalidate(slot)
+                    pool.free(slot)
+                    lanes.retire(slot)
+                tr.state = CANCELLED
+                tr.slot = -1
+                tr.metrics.cancelled = True
+                tr.metrics.finish_t = now()
+                tr.metrics.finish_step = self._step_idx
+                tr.metrics.new_tokens = len(tr.tokens)
+                tr.metrics.prefill_s = tr.prefill_s
+                tr.metrics.decode_s = tr.decode_s
+                em.cancellations += 1
+                self._trace.instant(
+                    SPAN_SCHED_CANCEL, tr.metrics.finish_t,
+                    args={"uid": uid, "slot": -1 if slot is None else slot,
+                          "tokens": len(tr.tokens)})
+                if board is not None:
+                    board.event("cancellations", 1.0,
+                                abst(tr.metrics.finish_t))
+                done.append(tr)
+                if svc is not None:
+                    svc.emit_finish(uid, tr)
 
         def apply_step(stats_np, toks_np, live_slots, dt, ts=None):
             """Host bookkeeping for ONE decode step: telemetry, token
@@ -274,6 +358,19 @@ class ContinuousScheduler:
             if ts is not None and self._trace.enabled:
                 self._trace_step(stats_np, live_slots, ts, dt)
             tok_t = (ts + dt) if ts is not None else now()
+            if board is not None:
+                board.observe("decode_step_s", dt, abst(tok_t))
+                board.observe("slot_occupancy",
+                              len(live_slots) / max(pool.num_slots, 1),
+                              abst(tok_t))
+                sel = float(sum(stats_np["sel_pages"][s]
+                                for s in live_slots))
+                if sel > 0:
+                    board.observe(
+                        "spec_hit_rate",
+                        float(sum(stats_np["spec_hit_pages"][s]
+                                  for s in live_slots)) / sel,
+                        abst(tok_t))
             for s in live_slots:
                 tr = active[s]
                 tr.decode_s += dt
@@ -288,7 +385,14 @@ class ContinuousScheduler:
                     em.observe_token_gap(gap)
                     if gap > tr.metrics.max_token_gap_s:
                         tr.metrics.max_token_gap_s = gap
+                    if board is not None:
+                        board.observe("itl_s", gap, abst(tok_t))
                 tr.last_tok_t = tok_t
+                if board is not None:
+                    board.event("tokens", 1.0, abst(tok_t))
+                if svc is not None:
+                    svc.emit_token(tr.req.uid, len(tr.tokens) - 1, tok,
+                                   tok_t)
                 if tr.finished():
                     del active[s]
                     finish(tr, s)
@@ -302,6 +406,14 @@ class ContinuousScheduler:
             tr.tokens.append(tok)
             tr.state = DECODE
             tr.slot = slot
+            if board is not None:
+                t_abs = abst(tr.metrics.first_token_t)
+                board.observe("ttft_s", tr.metrics.first_token_t
+                              - tr.metrics.enqueue_t, t_abs)
+                board.event("tokens", 1.0, t_abs)
+            if svc is not None:
+                svc.emit_token(tr.req.uid, 0, tok,
+                               tr.metrics.first_token_t)
             if tr.finished():           # max_new_tokens == 1 or instant EOS
                 finish(tr, slot)
             else:
@@ -329,6 +441,8 @@ class ContinuousScheduler:
             active[slot] = tr
             em.resumes += 1
             em.swap_in_bytes += nbytes
+            if board is not None:
+                board.event("swap_bytes", nbytes, abst(now()))
             self._trace.instant(SPAN_SCHED_RESUME, now(),
                                 args={"uid": tr.req.uid, "slot": slot,
                                       "bytes": nbytes})
@@ -343,6 +457,10 @@ class ContinuousScheduler:
                 return
             tr.state = PREFILL
             tr.metrics.prefill_start_t = now()
+            if board is not None:
+                board.observe("queue_wait_s", tr.metrics.prefill_start_t
+                              - tr.metrics.enqueue_t,
+                              abst(tr.metrics.prefill_start_t))
             slot = pool.alloc(tr.req.uid)
             if chunk > 0:
                 # chunked path: the slot is held while the job advances one
@@ -386,6 +504,10 @@ class ContinuousScheduler:
                 victim.metrics.preemptions += 1
                 em.preemptions += 1
                 em.swap_out_bytes += nbytes
+                if board is not None:
+                    t_abs = abst(now())
+                    board.event("preemptions", 1.0, t_abs)
+                    board.event("swap_bytes", nbytes, t_abs)
                 self._trace.instant(
                     SPAN_SCHED_PREEMPT, now(),
                     args={"uid": victim.req.uid, "slot": slot,
@@ -425,7 +547,16 @@ class ContinuousScheduler:
                 if budget <= 0:
                     break
 
-        while queue or active or prefilling:
+        while queue or active or prefilling \
+                or (svc is not None and not svc.closed):
+            # -- live serving: drain arrivals + disconnects ---------------
+            if svc is not None:
+                for r in svc.poll():
+                    queue.append(track(r))
+                cancels = svc.drain_cancels()
+                if cancels:
+                    cancel_pass(cancels)
+                em.wall_s = now()       # keep live tokens/s meaningful
             # -- admission: refill freed slots at the host boundary (FIFO) -
             while queue and pool.free_count:
                 admit_one(queue.popleft())
@@ -436,12 +567,15 @@ class ContinuousScheduler:
             if prefilling:
                 advance_prefill()
             if not active:
+                if svc is not None and not (queue or prefilling):
+                    svc.wait(0.002)     # idle: park until work arrives
                 continue
 
             pool.flush_resets()          # lazily reset freed-but-idle slots
             if on_device:
                 self._window_steps(backend, pool, em, lanes, apply_step,
-                                   stop_turnover=bool(queue))
+                                   stop_turnover=bool(queue)
+                                   or (svc is not None and svc.pending))
             else:
                 self._sync_step(backend, pool, em, lanes, apply_step)
 

@@ -1,0 +1,393 @@
+"""Async streaming front-end: EngineService + HTTP server over ServeEngine.
+
+Fake-backend tests pin the service-mode scheduler semantics (dynamic
+admission, per-token event streaming, cancellation releasing slots with
+surviving requests bit-identical); real-engine tests drive the stdlib
+asyncio HTTP server end-to-end (chunked NDJSON streaming, concurrent
+clients, live /metrics + /stats + /healthz, disconnect-cancels-request).
+"""
+import json
+import os
+import socket
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import FreeKVConfig
+from repro.obs import Observability, validate_timeseries_snapshot
+from repro.serving.frontend import (EngineService, http_generate,
+                                    http_get_json, http_get_text,
+                                    serve_http_background)
+from repro.serving.sampling import SamplerConfig
+from repro.serving.scheduler import CANCELLED, ContinuousScheduler
+
+from test_preemption import FakeBackend, FakePool, FakeReq
+
+
+# ---------------------------------------------------------------------------
+# fake engine facade: ContinuousScheduler service mode without a model
+# ---------------------------------------------------------------------------
+class FakeEngine:
+    def __init__(self, num_slots=2, **kw):
+        self.backend = FakeBackend(**kw)
+        self.pool = FakePool(num_slots)
+        self.last_metrics = None
+
+    def serve_service(self, service, seed=0):
+        done, em = ContinuousScheduler(self.backend, self.pool).run(
+            [], seed=seed, service=service)
+        self.last_metrics = em
+        return done
+
+
+class Collector:
+    """Per-request event sink; callbacks arrive on the scheduler thread."""
+
+    def __init__(self, cancel_after=None, service=None, uid=None):
+        self.events = []
+        self.finish = None
+        self.done = threading.Event()
+        self._cancel_after = cancel_after
+        self._service = service
+        self._uid = uid
+
+    def __call__(self, kind, payload):
+        self.events.append((kind, payload))
+        if kind == "finish":
+            self.finish = payload
+            self.done.set()
+        elif kind == "error":
+            self.finish = payload
+            self.done.set()
+        elif self._cancel_after is not None and kind == "token" \
+                and payload["index"] + 1 == self._cancel_after:
+            self._service.cancel(self._uid)
+
+    @property
+    def tokens(self):
+        return [p["token"] for k, p in self.events if k == "token"]
+
+    @property
+    def indexes(self):
+        return [p["index"] for k, p in self.events if k == "token"]
+
+
+def _direct_tokens(reqs, num_slots, seed=0):
+    done, _ = ContinuousScheduler(FakeBackend(), FakePool(num_slots)).run(
+        reqs, seed=seed)
+    return {tr.req.uid: tr.tokens for tr in done}
+
+
+def _reqs(spec):
+    rng = np.random.default_rng(0)
+    return [FakeReq(uid=u, tokens=rng.integers(0, 5000, 8).astype(np.int32),
+                    max_new_tokens=n) for u, n in spec]
+
+
+# ---------------------------------------------------------------------------
+# EngineService semantics (fake backend)
+# ---------------------------------------------------------------------------
+def test_service_streams_bit_identical_to_direct_run():
+    """Tokens streamed through the service equal a direct scheduler run of
+    the same traffic (same uids + seed -> same per-request PRNG streams),
+    with in-order indexes 0..n-1 per request."""
+    spec = [(0, 5), (1, 9), (2, 3), (3, 7)]
+    eng = FakeEngine(num_slots=2)
+    svc = EngineService(eng, seed=11).start()
+    cols = {}
+    for uid, n in spec:
+        cols[uid] = Collector()
+        svc.submit(np.arange(8, dtype=np.int32) + uid, n, cols[uid], uid=uid)
+    completions = svc.stop()
+    direct = _direct_tokens(_reqs(spec), num_slots=2, seed=11)
+    for uid, n in spec:
+        assert cols[uid].done.is_set()
+        assert cols[uid].indexes == list(range(n))
+        assert cols[uid].tokens == direct[uid]
+        assert cols[uid].finish["tokens"] == direct[uid]
+        assert cols[uid].finish["cancelled"] is False
+        assert cols[uid].finish["ttft_s"] is not None
+    assert sorted(tr.req.uid for tr in completions) == [0, 1, 2, 3]
+    assert eng.last_metrics.cancellations == 0
+
+
+def test_service_dynamic_admission_mid_run():
+    """Requests submitted while the scheduler is already decoding are
+    admitted and complete (the live-serving loop condition)."""
+    eng = FakeEngine(num_slots=1)
+    svc = EngineService(eng, seed=3).start()
+    first = Collector()
+    svc.submit(np.arange(8, dtype=np.int32), 200, first, uid=0)
+    while len(first.tokens) < 3:        # scheduler demonstrably running
+        time.sleep(0.001)
+    late = Collector()
+    svc.submit(np.arange(8, dtype=np.int32), 4, late, uid=1)
+    svc.stop()
+    assert first.done.is_set() and len(first.tokens) == 200
+    assert late.done.is_set() and len(late.tokens) == 4
+    assert eng.pool.free_count == eng.pool.num_slots
+
+
+def test_service_cancellation_frees_slot_and_preserves_survivors():
+    """Cancelling one request mid-decode releases its slot (survivors'
+    streams are bit-identical to an uncancelled run), records CANCELLED,
+    and excludes the partial from completed/SLO accounting."""
+    eng = FakeEngine(num_slots=2)
+    svc = EngineService(eng, seed=7).start()
+    victim = Collector(cancel_after=3, service=svc, uid=1)
+    others = {0: Collector(), 2: Collector()}
+    svc.submit(np.arange(8, dtype=np.int32), 40, others[0], uid=0)
+    svc.submit(np.arange(8, dtype=np.int32) + 1, 400, victim, uid=1)
+    svc.submit(np.arange(8, dtype=np.int32) + 2, 6, others[2], uid=2)
+    svc.stop()
+    em = eng.last_metrics
+
+    assert victim.done.is_set()
+    assert victim.finish["cancelled"] is True
+    assert victim.finish["state"] == CANCELLED
+    assert 3 <= len(victim.tokens) < 400       # cut off mid-stream
+    # the freed slot admitted uid 2, and every slot returned to the pool
+    assert others[2].done.is_set() and len(others[2].tokens) == 6
+    assert eng.pool.free_count == eng.pool.num_slots
+    assert all(o is None for o in eng.pool.owner)
+    # survivors bit-identical to the same traffic without the cancel
+    direct = _direct_tokens(_reqs([(0, 40), (1, 400), (2, 6)]),
+                            num_slots=2, seed=7)
+    assert others[0].tokens == direct[0]
+    assert others[2].tokens == direct[2]
+    assert victim.tokens == direct[1][:len(victim.tokens)]
+    # accounting: CANCELLED is terminal, outside completed/latency/SLO
+    assert em.cancellations == 1
+    s = em.summary()
+    assert s["completed"] == 2 and s["cancelled"] == 1
+    assert s["latency"]["ttft_s"]["count"] == 2
+
+
+def test_service_cancel_queued_request_never_starts():
+    eng = FakeEngine(num_slots=1)
+    svc = EngineService(eng, seed=5).start()
+    running = Collector()
+    queued = Collector()
+    svc.submit(np.arange(8, dtype=np.int32), 300, running, uid=0)
+    while len(running.tokens) < 2:
+        time.sleep(0.001)
+    svc.submit(np.arange(8, dtype=np.int32), 5, queued, uid=1)
+    svc.cancel(1)
+    svc.stop()
+    assert queued.done.is_set()
+    assert queued.finish["cancelled"] is True and queued.tokens == []
+    assert running.done.is_set() and len(running.tokens) == 300
+    assert eng.last_metrics.cancellations == 1
+
+
+def test_service_submit_validation():
+    eng = FakeEngine(num_slots=1)
+    svc = EngineService(eng).start()
+    c = Collector()
+    svc.submit([1, 2, 3], 2, c, uid=9)
+    with pytest.raises(ValueError, match="duplicate uid"):
+        svc.submit([1, 2, 3], 2, Collector(), uid=9)
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit([1, 2, 3], 2, Collector())
+    svc.stop()
+    assert c.done.is_set()
+
+
+# ---------------------------------------------------------------------------
+# HTTP front-end over the real engine
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def http_setup():
+    cfg = get_config("smollm-360m-smoke")
+    from repro.models.model import init_params
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    fkv = FreeKVConfig(method="freekv", page_size=8, budget=64, n_sink=8,
+                       n_window=8, tau=0.8)
+    from repro.serving.engine import ServeEngine
+    eng = ServeEngine(cfg, fkv, params, max_len=256, batch_size=2,
+                      sampler=SamplerConfig(temperature=0.7),
+                      obs=Observability.full(),
+                      slo_ttft_ms=120_000.0, slo_itl_ms=120_000.0)
+    return cfg, eng
+
+
+def _http_prompt(cfg, n=48, seed=1):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab_size, n).astype(np.int32).tolist()
+
+
+def test_http_stream_bit_identical_and_concurrent(http_setup):
+    """Concurrent streaming clients each get an ordered start->token*->done
+    NDJSON stream whose tokens equal a direct engine.generate run of the
+    same (uid, prompt, seed) — the frontend adds no nondeterminism — and
+    /healthz + /metrics + /stats answer while requests are in flight."""
+    cfg, eng = http_setup
+    svc = EngineService(eng, seed=0).start()
+    fe, stop, th = serve_http_background(svc)
+    results, errors = {}, []
+
+    def client(uid):
+        try:
+            evs = list(http_generate("127.0.0.1", fe.port, {
+                "uid": uid, "tokens": _http_prompt(cfg, 48 + 8 * uid,
+                                                   seed=uid),
+                "max_new_tokens": 8, "slo_ttft_ms": 120000}))
+            results[uid] = evs
+        except Exception as e:                   # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(u,)) for u in (0, 1, 2)]
+    for t in threads:
+        t.start()
+    deadline = time.time() + 120
+    while svc.em is None and time.time() < deadline:
+        time.sleep(0.01)                # scheduler attaches its registry
+    # live endpoints while the engine decodes
+    st, hz = http_get_json("127.0.0.1", fe.port, "/healthz")
+    assert st == 200 and hz["ok"] is True
+    st, prom = http_get_text("127.0.0.1", fe.port, "/metrics")
+    assert st == 200 and "# TYPE" in prom
+    st, stats = http_get_json("127.0.0.1", fe.port, "/stats")
+    assert st == 200 and validate_timeseries_snapshot(stats) == []
+    for t in threads:
+        t.join()
+    assert errors == []
+    stop.set()
+    th.join()
+    svc.stop()
+
+    em = eng.last_metrics
+    assert em.registry.counter("requests_completed_total").value == 3
+    # SLO section: all three tagged generously -> full attainment
+    slo = em.summary()["slo"]
+    assert slo["tagged"] == 3 and slo["attainment"] == 1.0
+    assert slo["goodput_tokens_per_s"] > 0
+
+    # event-stream shape + per-token timestamps
+    for uid, evs in results.items():
+        kinds = [e["event"] for e in evs]
+        assert kinds[0] == "start" and kinds[-1] == "done"
+        toks = [e for e in evs if e["event"] == "token"]
+        assert [e["index"] for e in toks] == list(range(8))
+        assert all("t" in e and "t_server" in e for e in toks)
+        assert evs[-1]["tokens"] == [e["token"] for e in toks]
+
+    # bit-identity: direct run, same uids/prompts/seed, no frontend
+    from repro.serving.engine import Request
+    reqs = [Request(uid=u, tokens=np.asarray(_http_prompt(cfg, 48 + 8 * u,
+                                                          seed=u), np.int32),
+                    max_new_tokens=8) for u in (0, 1, 2)]
+    direct = {c.uid: c.tokens for c in eng.generate(reqs, seed=0)}
+    for uid, evs in results.items():
+        assert evs[-1]["tokens"] == direct[uid], \
+            f"uid {uid}: frontend stream != direct engine run"
+
+
+def test_http_disconnect_cancels_request(http_setup):
+    """A client that drops its socket mid-stream cancels the request: the
+    scheduler records CANCELLED, frees the slot, and a concurrent survivor
+    completes with tokens identical to an undisturbed run."""
+    cfg, eng = http_setup
+    svc = EngineService(eng, seed=0).start()
+    fe, stop, th = serve_http_background(svc)
+
+    prompt = _http_prompt(cfg, 64, seed=9)
+    body = json.dumps({"uid": 100, "tokens": prompt,
+                       "max_new_tokens": 160, "stream": True}).encode()
+    s = socket.create_connection(("127.0.0.1", fe.port), timeout=60)
+    s.sendall(b"POST /generate HTTP/1.1\r\nHost: t\r\n"
+              b"Content-Type: application/json\r\n"
+              b"Content-Length: " + str(len(body)).encode() + b"\r\n\r\n"
+              + body)
+    buf = b""
+    while buf.count(b'"event": "token"') < 2:     # a few tokens flowed
+        chunk = s.recv(4096)
+        assert chunk, "server closed stream early"
+        buf += chunk
+    s.close()                                     # client walks away
+
+    # survivor admitted while the cancel propagates
+    evs = list(http_generate("127.0.0.1", fe.port, {
+        "uid": 101, "tokens": _http_prompt(cfg, 48, seed=2),
+        "max_new_tokens": 6}))
+    assert evs[-1]["event"] == "done"
+
+    deadline = time.time() + 30
+    while svc.em.cancellations < 1 and time.time() < deadline:
+        time.sleep(0.01)
+    stop.set()
+    th.join()
+    completions = svc.stop()
+    em = eng.last_metrics
+    assert em.cancellations == 1
+    by_uid = {c.uid: c for c in completions}
+    assert by_uid[100].metrics.cancelled is True
+    assert 2 <= len(by_uid[100].tokens) < 160
+    assert by_uid[101].metrics.cancelled is False
+
+    # survivor bit-identical to an undisturbed run
+    from repro.serving.engine import Request
+    direct = eng.generate([Request(
+        uid=101, tokens=np.asarray(_http_prompt(cfg, 48, seed=2), np.int32),
+        max_new_tokens=6)], seed=0)
+    assert evs[-1]["tokens"] == direct[0].tokens
+
+
+def test_check_obs_validates_stats_file_and_live_url(http_setup, tmp_path):
+    """tools/check_obs.py --stats / --url: the /stats snapshot file and a
+    live front-end both validate; a corrupted snapshot is rejected."""
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "check_obs", os.path.join(os.path.dirname(__file__), "..",
+                                  "tools", "check_obs.py"))
+    check_obs = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(check_obs)
+
+    cfg, eng = http_setup
+    svc = EngineService(eng, seed=0).start()
+    fe, stop, th = serve_http_background(svc)
+    try:
+        evs = list(http_generate("127.0.0.1", fe.port, {
+            "tokens": _http_prompt(cfg, 48, seed=4), "max_new_tokens": 4}))
+        assert evs[-1]["event"] == "done"
+        assert check_obs.check_url(f"http://127.0.0.1:{fe.port}") == []
+        _, stats = http_get_json("127.0.0.1", fe.port, "/stats")
+    finally:
+        stop.set()
+        th.join()
+        svc.stop()
+    good = tmp_path / "stats.json"
+    good.write_text(json.dumps(stats))
+    assert check_obs.check_stats(str(good)) == []
+    stats["stats"]["ttft_s"]["p50"] = float("inf")   # json parses Infinity
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(stats))
+    assert check_obs.check_stats(str(bad))
+    assert check_obs.check_url(f"http://127.0.0.1:{fe.port}")  # server gone
+
+
+def test_http_bad_requests(http_setup):
+    cfg, eng = http_setup
+    svc = EngineService(eng, seed=0).start()
+    fe, stop, th = serve_http_background(svc)
+    import http.client
+    conn = http.client.HTTPConnection("127.0.0.1", fe.port, timeout=30)
+    conn.request("POST", "/generate", body=json.dumps({"tokens": []}),
+                 headers={"Content-Type": "application/json"})
+    assert conn.getresponse().status == 400
+    conn.close()
+    conn = http.client.HTTPConnection("127.0.0.1", fe.port, timeout=30)
+    conn.request("POST", "/generate", body=json.dumps(
+        {"tokens": [1] * 64, "max_new_tokens": 10_000}))
+    assert conn.getresponse().status == 400       # exceeds engine max_len
+    conn.close()
+    st, _ = http_get_json("127.0.0.1", fe.port, "/nope")
+    assert st == 404
+    stop.set()
+    th.join()
+    svc.stop()

@@ -1,0 +1,193 @@
+"""Sliding-window time-series aggregators: rotation, percentiles, schema."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs import (Observability, TimeSeriesBoard,
+                       validate_timeseries_snapshot)
+from repro.obs.timeseries import (TIMESERIES_SCHEMA_VERSION, WindowRate,
+                                  WindowStat, _percentile_sorted)
+
+
+# ---------------------------------------------------------------------------
+# WindowStat: eviction + exact rolling percentiles vs numpy
+# ---------------------------------------------------------------------------
+def test_window_stat_rotation_evicts_old_samples():
+    ws = WindowStat("x", window_s=10.0)
+    for t in range(20):                       # one sample per "second"
+        ws.observe(float(t), t=float(t))
+    vals = ws.values(now=19.0)
+    # cutoff = 19 - 10 = 9: samples at t in [9, 19] survive
+    assert vals == [float(t) for t in range(9, 20)]
+    assert ws.summary(now=19.0)["count"] == 11
+    # advancing the clock with no new samples keeps evicting
+    assert ws.summary(now=40.0)["count"] == 0
+    assert ws.summary(now=40.0)["p99"] == 0.0
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_window_stat_percentiles_match_numpy_on_sliding_slices(seed):
+    """Rolling p50/p90/p99 equal np.percentile over the same time slice,
+    checked at several 'now' points as the window slides over the data."""
+    rng = np.random.default_rng(seed)
+    W = 5.0
+    ts = np.sort(rng.uniform(0.0, 30.0, 400))
+    vs = rng.lognormal(mean=-3.0, sigma=1.0, size=400)
+    ws = WindowStat("lat", window_s=W)
+    # feed in time order (the scheduler's clock is monotone) and evaluate
+    # at checkpoints as the window slides over the stream
+    idx = 0
+    for now in (6.0, 12.5, 20.0, 30.0):
+        while idx < len(ts) and ts[idx] <= now:
+            ws.observe(vs[idx], t=ts[idx])
+            idx += 1
+        in_win = vs[(ts >= now - W) & (ts <= now)]
+        got = ws.summary(now=now)
+        assert got["count"] == len(in_win)
+        for q, key in ((50, "p50"), (90, "p90"), (99, "p99")):
+            np.testing.assert_allclose(
+                got[key], np.percentile(in_win, q, method="linear"),
+                rtol=1e-12)
+        np.testing.assert_allclose(got["mean"], in_win.mean(), rtol=1e-12)
+        np.testing.assert_allclose(got["min"], in_win.min())
+        np.testing.assert_allclose(got["max"], in_win.max())
+
+
+def test_percentile_sorted_edge_cases():
+    assert _percentile_sorted([], 0.5) == 0.0
+    assert _percentile_sorted([3.0], 0.99) == 3.0
+    assert _percentile_sorted([1.0, 2.0], 0.5) == 1.5
+    vals = sorted([5.0, 1.0, 9.0, 3.0])
+    assert _percentile_sorted(vals, 0.0) == 1.0
+    assert _percentile_sorted(vals, 1.0) == 9.0
+
+
+def test_window_stat_ring_bound_caps_memory():
+    ws = WindowStat("x", window_s=1e9, max_samples=16)
+    for t in range(100):
+        ws.observe(float(t), t=float(t))
+    assert ws.summary(now=100.0)["count"] == 16   # ring bound, not window
+    assert ws.values(now=100.0) == [float(t) for t in range(84, 100)]
+
+
+# ---------------------------------------------------------------------------
+# WindowRate: rolling rate + cumulative totals
+# ---------------------------------------------------------------------------
+def test_window_rate_rolls_and_totals_accumulate():
+    wr = WindowRate("tokens", window_s=10.0)
+    for t in range(30):
+        wr.event(weight=2.0, t=float(t))
+    s = wr.summary(now=29.0)
+    assert s["events"] == 11 and s["weight"] == 22.0
+    assert s["events_per_s"] == pytest.approx(1.1)
+    assert s["weight_per_s"] == pytest.approx(2.2)
+    assert s["total_events"] == 30 and s["total_weight"] == 60.0
+    # fully rotated out: window empties, totals persist
+    s2 = wr.summary(now=100.0)
+    assert s2["events"] == 0 and s2["total_events"] == 30
+
+
+# ---------------------------------------------------------------------------
+# TimeSeriesBoard: snapshot schema + validator
+# ---------------------------------------------------------------------------
+def _manual_clock():
+    state = {"t": 0.0}
+
+    def clock():
+        return state["t"]
+
+    return state, clock
+
+
+def test_board_snapshot_schema_valid_and_json_stable():
+    state, clock = _manual_clock()
+    board = TimeSeriesBoard(window_s=5.0, clock=clock)
+    for i in range(50):
+        state["t"] = i * 0.1
+        board.observe("ttft_s", 0.01 * (i % 7))
+        board.observe("itl_s", 0.002 * (i % 3 + 1))
+        board.event("tokens", 1.0)
+        if i % 10 == 0:
+            board.event("completions", 1.0)
+    snap = board.snapshot()
+    assert validate_timeseries_snapshot(snap) == []
+    assert snap["schema_version"] == TIMESERIES_SCHEMA_VERSION
+    assert set(snap["stats"]) == {"ttft_s", "itl_s"}
+    assert set(snap["rates"]) == {"tokens", "completions"}
+    assert snap["rates"]["tokens"]["total_events"] == 50
+    # round-trips through JSON (the /stats payload)
+    assert validate_timeseries_snapshot(
+        json.loads(board.snapshot_line(extra={"k": 1}))) == []
+
+
+def test_board_snapshot_window_rotation_live():
+    state, clock = _manual_clock()
+    board = TimeSeriesBoard(window_s=2.0, clock=clock)
+    for i in range(10):
+        state["t"] = float(i)
+        board.observe("itl_s", float(i))
+    state["t"] = 9.0
+    s = board.snapshot()["stats"]["itl_s"]
+    assert s["count"] == 3 and s["min"] == 7.0 and s["max"] == 9.0
+
+
+def test_validator_flags_malformed_snapshots():
+    assert validate_timeseries_snapshot("nope")
+    assert any("schema_version" in e
+               for e in validate_timeseries_snapshot({}))
+    state, clock = _manual_clock()
+    board = TimeSeriesBoard(clock=clock)
+    board.observe("x", 1.0)
+    snap = board.snapshot()
+    snap["stats"]["x"]["p50"] = 99.0          # breaks p50 <= p90
+    assert any("monotone" in e for e in validate_timeseries_snapshot(snap))
+    snap2 = board.snapshot()
+    snap2["stats"]["x"]["mean"] = float("nan")
+    assert any("non-finite" in e for e in validate_timeseries_snapshot(snap2))
+    board.event("r", 1.0)
+    snap3 = board.snapshot()
+    snap3["rates"]["r"]["total_events"] = 0
+    snap3["rates"]["r"]["events"] = 5
+    assert any("exceed" in e for e in validate_timeseries_snapshot(snap3))
+
+
+def test_observability_full_attaches_board():
+    obs = Observability.full()
+    assert obs.timeseries is not None
+    assert Observability.off().timeseries is None
+    obs.timeseries.observe("ttft_s", 0.1)
+    assert validate_timeseries_snapshot(obs.timeseries.snapshot()) == []
+
+
+def test_board_thread_safety_under_concurrent_feed_and_snapshot():
+    import threading
+    board = TimeSeriesBoard(window_s=60.0)
+    stop = threading.Event()
+    errs = []
+
+    def feeder():
+        i = 0
+        while not stop.is_set():
+            board.observe("itl_s", 0.001 * (i % 5))
+            board.event("tokens", 1.0)
+            i += 1
+
+    def snapper():
+        try:
+            while not stop.is_set():
+                errors = validate_timeseries_snapshot(board.snapshot())
+                assert errors == [], errors
+        except Exception as e:                   # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=feeder) for _ in range(2)] + \
+        [threading.Thread(target=snapper) for _ in range(2)]
+    for t in threads:
+        t.start()
+    import time as _time
+    _time.sleep(0.3)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert errs == []

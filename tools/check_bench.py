@@ -21,7 +21,7 @@ is gated absolutely: the new value may not exceed the tolerance itself.
 
     PYTHONPATH=src python tools/check_bench.py [--tolerance 0.25]
         [--sections breakdown ablation quant_quality dispatch sharded
-         serving obs] [--list]
+         serving obs openloop] [--list]
 
 Exit status 0 = no regressions; 1 = regression or missing/failed re-run.
 Sections without a committed baseline are skipped with a warning
@@ -49,6 +49,7 @@ COMMANDS = {
                 "--smoke"],
     "preempt": [sys.executable, "benchmarks/preempt_latency.py", "--smoke"],
     "obs": [sys.executable, "benchmarks/obs_overhead.py", "--smoke"],
+    "openloop": [sys.executable, "benchmarks/openloop_load.py", "--smoke"],
 }
 
 # (path-into-metrics, direction); direction: "lower" | "higher" | "true"
@@ -141,6 +142,24 @@ GATES = {
             (("nonsync_bytes_per_step",), "lower"),
             (("trace_valid",), "true"),
             (("snapshot_valid",), "true"),
+        ],
+    },
+    "openloop": {
+        "cmd": "openloop",
+        "metrics": [
+            # every greedy token stream through the HTTP front-end must be
+            # bit-identical to the direct-engine run; the live /metrics +
+            # /stats endpoints must validate mid-load; serving over HTTP
+            # must add zero bytes between host syncs; at the lowest offered
+            # load every request meets the (generous) smoke SLO. The
+            # per-point TTFT/ITL quantiles and goodput tok/s are recorded,
+            # never gated (wall clock).
+            (("frontend_bit_identical",), "true"),
+            (("endpoints_valid",), "true"),
+            (("completed_all",), "true"),
+            (("nonsync_bytes_per_step",), "lower"),
+            (("slo_attainment_low_load",), "higher"),
+            (("load_points",), "higher"),
         ],
     },
     "sharded": {

@@ -14,9 +14,17 @@ Checks (exit 1 on any problem; paths default to the CI smoke artifacts):
 * ``--prom PATH`` — a Prometheus text exposition: every non-comment line
   must be ``name[{labels}] value`` with a finite numeric value, and every
   ``# TYPE`` must be counter/gauge/histogram.
+* ``--stats PATH`` — a sliding-window time-series snapshot (the
+  ``GET /stats`` payload): must parse and pass
+  :func:`repro.obs.validate_timeseries_snapshot` (schema_version,
+  finite fields, p50 <= p90 <= p99, window counts <= totals).
+* ``--url http://HOST:PORT`` — a LIVE ``--serve-http`` front-end: fetches
+  ``/healthz``, ``/metrics`` and ``/stats`` and runs the Prometheus and
+  time-series checks on the responses.
 
     PYTHONPATH=src python tools/check_obs.py --metrics m.jsonl \
-        --trace t.json [--prom m.prom]
+        --trace t.json [--prom m.prom] [--stats s.json] \
+        [--url http://127.0.0.1:8008]
 
 The exporter formats are documented in docs/observability.md.
 """
@@ -31,7 +39,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
-from repro.obs import validate_chrome_trace, validate_snapshot  # noqa: E402
+from repro.obs import (validate_chrome_trace,  # noqa: E402
+                       validate_snapshot, validate_timeseries_snapshot)
 
 
 def check_metrics_jsonl(path: str) -> list:
@@ -60,9 +69,13 @@ def check_trace(path: str) -> list:
 
 
 def check_prometheus(path: str) -> list:
-    errors = []
     with open(path, encoding="utf-8") as f:
         lines = f.read().splitlines()
+    return _prometheus_lines(lines, path)
+
+
+def _prometheus_lines(lines: list, path: str) -> list:
+    errors = []
     if not lines:
         return [f"{path}: empty"]
     for i, ln in enumerate(lines, 1):
@@ -89,6 +102,49 @@ def check_prometheus(path: str) -> list:
     return errors
 
 
+def check_stats(path: str) -> list:
+    try:
+        with open(path, encoding="utf-8") as f:
+            snap = json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        return [f"{path}: unreadable ({e})"]
+    return [f"{path}: {e}" for e in validate_timeseries_snapshot(snap)]
+
+
+def check_url(url: str) -> list:
+    """Validate a live ``--serve-http`` front-end: /healthz liveness,
+    /metrics Prometheus exposition, /stats time-series snapshot."""
+    import urllib.error
+    import urllib.request
+    url = url.rstrip("/")
+    errors = []
+
+    def fetch(path):
+        with urllib.request.urlopen(url + path, timeout=30.0) as r:
+            return r.status, r.read().decode()
+
+    try:
+        st, body = fetch("/healthz")
+        health = json.loads(body)
+        if st != 200 or not health.get("ok"):
+            errors.append(f"{url}/healthz: status {st}, body {body!r}")
+        st, body = fetch("/metrics")
+        if st != 200:
+            errors.append(f"{url}/metrics: status {st}")
+        else:
+            errors.extend(_prometheus_lines(body.splitlines(),
+                                            f"{url}/metrics"))
+        st, body = fetch("/stats")
+        if st != 200:
+            errors.append(f"{url}/stats: status {st}")
+        else:
+            errors.extend(f"{url}/stats: {e}" for e in
+                          validate_timeseries_snapshot(json.loads(body)))
+    except (urllib.error.URLError, OSError, json.JSONDecodeError) as e:
+        errors.append(f"{url}: unreachable/unparseable ({e})")
+    return errors
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--metrics", default=None,
@@ -97,14 +153,23 @@ def main() -> int:
                     help="Chrome-trace/Perfetto JSON file")
     ap.add_argument("--prom", default=None,
                     help="Prometheus text exposition file")
+    ap.add_argument("--stats", default=None,
+                    help="sliding-window time-series snapshot JSON file "
+                         "(the GET /stats payload)")
+    ap.add_argument("--url", default=None, metavar="http://HOST:PORT",
+                    help="validate a live --serve-http front-end "
+                         "(/healthz, /metrics, /stats)")
     args = ap.parse_args()
-    if not (args.metrics or args.trace or args.prom):
-        ap.error("nothing to check: pass --metrics / --trace / --prom")
+    if not (args.metrics or args.trace or args.prom or args.stats
+            or args.url):
+        ap.error("nothing to check: pass --metrics / --trace / --prom "
+                 "/ --stats / --url")
 
     errors = []
     for path, fn, label in ((args.metrics, check_metrics_jsonl, "metrics"),
                             (args.trace, check_trace, "trace"),
-                            (args.prom, check_prometheus, "prometheus")):
+                            (args.prom, check_prometheus, "prometheus"),
+                            (args.stats, check_stats, "stats")):
         if path is None:
             continue
         if not os.path.exists(path):
@@ -113,6 +178,11 @@ def main() -> int:
         errs = fn(path)
         errors.extend(errs)
         print(f"{label}: {path} — "
+              f"{'OK' if not errs else f'{len(errs)} problem(s)'}")
+    if args.url:
+        errs = check_url(args.url)
+        errors.extend(errs)
+        print(f"live: {args.url} — "
               f"{'OK' if not errs else f'{len(errs)} problem(s)'}")
     for e in errors:
         print(f"  {e}", file=sys.stderr)
