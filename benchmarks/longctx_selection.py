@@ -1,0 +1,327 @@
+"""Long-context selection sweep: exact full-scan vs centroid-then-token.
+
+FreeKV's exact selection scans every host-pool page summary per decode step
+— O(n_pages). The ``centroid`` retriever (core/centroid_index) scores the
+C cluster bounding boxes first and runs exact page scoring only on the
+inherited-score candidate set — O(C + candidates). This benchmark measures
+what that buys at long context (own process: it forces XLA host devices for
+the tp=2 cells before jax initializes):
+
+* **selection sweep** (32K -> 256K-token pools on CPU): per-step
+  selection-scan bytes + FLOPs for exact vs centroid, needle-retrieval
+  accuracy of each against planted needle pages, and the fraction of the
+  exact top-k the centroid selection recovers. The byte/FLOP accounting is
+  analytic from counts (repo convention: the jnp paths compute full-width
+  with masking; a real kernel scans only what the counts say).
+* **1M-token extrapolation**: the analytic cost model (``_common.HwModel``)
+  extends the measured per-step scan counts to a 1M-token pool —
+  machine-independent (fixed constants), so the reduction ratio is gated.
+* **engine bit-identity cells**: ``retriever="centroid"`` vs
+  ``retriever="freekv"`` greedy token streams over
+  overlap={on,off} x kv_quant={none,int8} x tp={1,2} — correction-on
+  centroid serving must be bit-identical to freekv on the smoke config
+  (any False fails CI via tools/check_bench.py).
+* **recall-overlap hidden fraction**: a decode-dominated centroid run
+  reports how much recall traffic the speculative stream hides
+  (EngineMetrics.summary()["recall_overlap"]); with ``--artifacts DIR`` it
+  also writes the metrics snapshot + Perfetto trace for the nightly job
+  (validated by tools/check_obs.py).
+
+    PYTHONPATH=src python benchmarks/longctx_selection.py [--smoke]
+        [--artifacts DIR] [--no-json]
+
+Writes the ``BENCH_longctx.json`` trajectory file (schema: _common.bench_json).
+"""
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=2")
+
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from _common import HwModel, bench_json  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.configs.base import FreeKVConfig  # noqa: E402
+from repro.core import centroid_index, selection  # noqa: E402
+
+SMOKE = dict(pools=(32768, 262144), page_size=32, budget_pages=96,
+             n_cent=64, steps=4, needles=16,
+             context=64, requests=4, slots=2, short_new=3, long_new=6,
+             eng_page=8, eng_budget=48, eng_cent=4, hidden_new=48)
+FULL = dict(pools=(32768, 65536, 131072, 262144), page_size=32,
+            budget_pages=96, n_cent=64, steps=8, needles=16,
+            context=128, requests=6, slots=3, short_new=4, long_new=10,
+            eng_page=8, eng_budget=48, eng_cent=4, hidden_new=96)
+
+
+# ---------------------------------------------------------------------------
+# selection-level sweep (summaries only — no token pool materialized)
+# ---------------------------------------------------------------------------
+def _make_summaries(key, N, kv, d, n_proc_clusters=48):
+    """Cluster-structured page summaries: per-page box = process-cluster
+    center +- spread (the distribution the centroid index is built for)."""
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (n_proc_clusters, kv, d))
+    assign = jax.random.randint(ka, (N,), 0, n_proc_clusters)
+    mid = centers[assign] + 0.2 * jax.random.normal(kn, (N, kv, d))
+    w = 0.3 * jnp.abs(jax.random.normal(jax.random.fold_in(kn, 1),
+                                        (N, kv, d))) + 0.05
+    return jnp.stack([mid - w, mid + w], axis=2)[None]   # (1, N, kv, 2, d)
+
+
+def _plant_needles(summ, needle_pages, u, strength=3.0):
+    """One semantic needle *region*: the needle pages' summaries sit in a
+    tight ball around ``strength * |u|`` (kv, d) in key space — a distinct
+    passage whose pages resemble each other, which is what the centroid
+    index clusters on. A query aligned with u scores them at the top of the
+    exact scan; the index must keep them reachable through the cluster the
+    region lands in (scattering needles across many fat clusters instead
+    would overflow any fixed candidate budget with tied cluster scores —
+    that regime is the index's documented failure mode, not its use case)."""
+    n = needle_pages.shape[0]
+    kv, d = summ.shape[2], summ.shape[4]
+    jit = 0.05 * jax.random.normal(jax.random.PRNGKey(7), (n, kv, d))
+    mid = strength * jnp.abs(u)[None] + jit
+    summ = summ.at[0, needle_pages, :, 0, :].set(mid - 0.1)
+    summ = summ.at[0, needle_pages, :, 1, :].set(mid + 0.1)
+    return summ
+
+
+def _scan_counts(N, n_cent, m, kv, d, itemsize=4):
+    """Per-step selection-scan bytes + FLOPs from counts. Exact scans every
+    page summary; centroid scans C cluster boxes (stage 1), assigns the one
+    completed page against the C means, and scores only the m gathered
+    candidates (stage 2)."""
+    box = 2 * d * itemsize                     # one (lo, hi) summary row
+    exact_bytes = N * kv * box
+    cent_bytes = (n_cent * kv * box            # stage 1: cluster boxes
+                  + m * kv * box               # stage 2: candidates
+                  + n_cent * kv * d * itemsize)  # incremental assignment
+    # two dot products over d per (page|box, head-group) score
+    exact_flops = N * kv * 4 * d
+    cent_flops = (n_cent + m) * kv * 4 * d + n_cent * kv * 3 * d
+    return exact_bytes, cent_bytes, exact_flops, cent_flops
+
+
+def selection_sweep(p, quiet):
+    cfg = get_config("granite-3-8b-smoke")
+    kv, d, H = cfg.n_kv_heads, cfg.d_head, cfg.n_heads
+    ps = p["page_size"]
+    n_sel = p["budget_pages"]
+    fkv = FreeKVConfig(method="centroid", page_size=ps,
+                       budget=(n_sel + 2) * ps, n_sink=ps, n_window=ps,
+                       tau=0.8, centroid_count=p["n_cent"],
+                       group_pool="mean_qk")
+    out = {}
+    for T in p["pools"]:
+        N = T // ps
+        key = jax.random.PRNGKey(T)
+        summ = _make_summaries(key, N, kv, d)
+        rng = np.random.default_rng(T)
+        needle_pages = jnp.asarray(rng.choice(
+            np.arange(ps // ps + 1, N - 2), size=p["needles"],
+            replace=False))
+        u = jax.random.normal(jax.random.fold_in(key, 9), (kv, d))
+        summ = _plant_needles(summ, needle_pages, u)
+        length = jnp.full((1,), T, jnp.int32)
+        st = {"summ": summ, "length": length}
+        st.update(centroid_index.build(summ, length, p["n_cent"], ps,
+                                       jnp.float32))
+        m = centroid_index.candidate_count(N, n_sel)
+        acc_e = acc_c = ovl = 0.0
+        nset = set(np.asarray(needle_pages).tolist())
+        for t in range(p["steps"]):
+            qn = 0.25 * jax.random.normal(jax.random.fold_in(key, 100 + t),
+                                          (1, H, d))
+            q = jnp.repeat(jnp.abs(u)[None].reshape(1, kv, 1, d), H // kv,
+                           axis=2).reshape(1, H, d) + qn
+            e_idx, _ = selection.select_pages(cfg, fkv, q, summ, length,
+                                              n_sel)
+            c_idx, _ = centroid_index.centroid_select(cfg, fkv, q, st, n_sel)
+            e = set(np.asarray(e_idx[0, 0]).tolist()) - {-1}
+            c = set(np.asarray(c_idx[0, 0]).tolist()) - {-1}
+            acc_e += len(nset & e) / len(nset)
+            acc_c += len(nset & c) / len(nset)
+            ovl += len(e & c) / max(len(e), 1)
+        acc_e /= p["steps"]
+        acc_c /= p["steps"]
+        ovl /= p["steps"]
+        eb, cb, ef, cf = _scan_counts(N, p["n_cent"], m, kv, d)
+        out[str(T)] = {
+            "n_pages": N, "candidates": m,
+            "needle_acc_exact": acc_e, "needle_acc_centroid": acc_c,
+            "topk_overlap_frac": ovl,
+            "scan_bytes_exact": eb, "scan_bytes_centroid": cb,
+            "scan_bytes_reduction": eb / cb,
+            "scan_flops_exact": ef, "scan_flops_centroid": cf,
+            "scan_flops_reduction": ef / cf,
+        }
+        if not quiet:
+            r = out[str(T)]
+            print(f"  pool={T:>7d} pages={N:>5d} "
+                  f"bytes {eb/1e6:7.2f}MB -> {cb/1e6:5.2f}MB "
+                  f"({r['scan_bytes_reduction']:5.1f}x)  "
+                  f"needle exact={acc_e:.3f} centroid={acc_c:.3f} "
+                  f"overlap={ovl:.3f}")
+    return out
+
+
+def extrapolate_1m(p, hw=HwModel()):
+    """Analytic scan cost at a 1M-token pool (counts x fixed HW constants —
+    machine-independent, so the ratio is gated)."""
+    cfg = get_config("granite-3-8b-smoke")
+    kv, d = cfg.n_kv_heads, cfg.d_head
+    N = 1_000_000 // p["page_size"]
+    m = centroid_index.candidate_count(N, p["budget_pages"])
+    eb, cb, ef, cf = _scan_counts(N, p["n_cent"], m, kv, d)
+    us_e = (eb / hw.hbm_bw + ef / hw.peak_flops) * 1e6
+    us_c = (cb / hw.hbm_bw + cf / hw.peak_flops) * 1e6
+    return {"pool_tokens": 1_000_000, "n_pages": N,
+            "us_exact": us_e, "us_centroid": us_c,
+            "scan_reduction": eb / cb}
+
+
+# ---------------------------------------------------------------------------
+# engine cells: centroid vs freekv bit-identity + hidden fraction
+# ---------------------------------------------------------------------------
+def _requests(cfg, context, n, short_new, long_new, seed=0):
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        context).astype(np.int32),
+                    max_new_tokens=short_new if i % 2 == 0 else long_new)
+            for i in range(n)]
+
+
+def engine_cells(p, artifacts, quiet):
+    from repro.models.model import init_params
+    from repro.obs import Observability, TraceRecorder
+    from repro.serving.engine import Request, ServeEngine
+    from repro.serving.sampling import SamplerConfig
+    cfg = get_config("granite-3-8b-smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    base = FreeKVConfig(retriever="centroid", page_size=p["eng_page"],
+                        budget=p["eng_budget"], n_sink=p["eng_page"],
+                        n_window=p["eng_page"], tau=0.8,
+                        centroid_count=p["eng_cent"],
+                        centroid_refresh_interval=3)
+    def engine(fkv, tp, max_new, obs=None):
+        kw = {} if obs is None else {"obs": obs}
+        max_len = p["context"] + max_new + 2 * p["eng_page"]
+        return ServeEngine(cfg, fkv, params, max_len=max_len,
+                           batch_size=p["slots"],
+                           sampler=SamplerConfig(temperature=0.0),
+                           scheduler="continuous", tp=tp, **kw)
+
+    ident_all = True
+    configs = {}
+    for overlap in (True, False):
+        for quant in ("none", "int8"):
+            for tp in (1, 2):
+                fkv_c = dataclasses.replace(base, recall_overlap=overlap,
+                                            kv_quant=quant)
+                fkv_f = dataclasses.replace(fkv_c, method="freekv",
+                                            retriever="")
+                toks = {}
+                for name, f in (("centroid", fkv_c), ("freekv", fkv_f)):
+                    eng = engine(f, tp, p["long_new"])
+                    toks[name] = [c.tokens for c in eng.generate(
+                        _requests(cfg, p["context"], p["requests"],
+                                  p["short_new"], p["long_new"]))]
+                ident = toks["centroid"] == toks["freekv"]
+                ident_all &= ident
+                cell = f"overlap={int(overlap)}/quant={quant}/tp={tp}"
+                configs[cell] = {"bit_identical": bool(ident)}
+                if not quiet:
+                    print(f"  {cell:32s} bit_identical={ident}")
+
+    # decode-dominated centroid run: overlap hidden fraction + obs artifacts
+    obs = Observability(enabled=True, trace=TraceRecorder(enabled=True))
+    eng = engine(dataclasses.replace(base, recall_overlap=True), 1,
+                 p["hidden_new"], obs=obs)
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, p["context"]).astype(np.int32)
+    eng.generate([Request(uid=0, tokens=prompt,
+                          max_new_tokens=p["hidden_new"])])
+    ro = eng.last_metrics.summary()["recall_overlap"]
+    if artifacts:
+        os.makedirs(artifacts, exist_ok=True)
+        eng.last_metrics.registry.write_jsonl(
+            os.path.join(artifacts, "obs_metrics.jsonl"),
+            extra={"bench": "longctx", "retriever": "centroid"})
+        with open(os.path.join(artifacts, "obs_metrics.prom"), "w",
+                  encoding="utf-8") as f:
+            f.write(eng.last_metrics.registry.to_prometheus())
+        eng.obs.trace.write(os.path.join(artifacts, "obs_trace.json"))
+        if not quiet:
+            print(f"  artifacts -> {artifacts}/ (obs_metrics.jsonl, "
+                  "obs_metrics.prom, obs_trace.json)")
+    return bool(ident_all), configs, ro
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="exact vs centroid-then-token selection at long context")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (32K + 256K points)")
+    ap.add_argument("--artifacts", default=None, metavar="DIR",
+                    help="write obs metrics snapshot + trace for the "
+                         "nightly job")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing BENCH_longctx.json")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    p = SMOKE if args.smoke else FULL
+
+    if not args.quiet:
+        print("== selection sweep (exact vs centroid) ==")
+    sweep = selection_sweep(p, args.quiet)
+    ext = extrapolate_1m(p)
+    if not args.quiet:
+        print(f"== 1M extrapolation: {ext['us_exact']:.1f}us -> "
+              f"{ext['us_centroid']:.1f}us scan "
+              f"({ext['scan_reduction']:.1f}x) ==")
+        print("== engine cells (centroid vs freekv, correction on) ==")
+    bit, configs, ro = engine_cells(p, args.artifacts, args.quiet)
+
+    top = sweep[str(max(p["pools"]))]
+    needle_ok = all(s["needle_acc_centroid"] >= s["needle_acc_exact"] - 0.01
+                    for s in sweep.values())
+    metrics = {
+        "sweep": sweep,
+        "reduction_256k": top["scan_bytes_reduction"],
+        "reduction_ge_4x": top["scan_bytes_reduction"] >= 4.0,
+        "needle_within_1pct": needle_ok,
+        "needle_acc_exact_256k": top["needle_acc_exact"],
+        "needle_acc_centroid_256k": top["needle_acc_centroid"],
+        "topk_overlap_256k": top["topk_overlap_frac"],
+        "extrapolated_1m": ext,
+        "bit_identical": bit,
+        "configs": configs,
+        "hidden_fraction": ro["hidden_fraction"],
+        "hidden_bytes": ro["hidden_bytes"],
+        "exposed_bytes": ro["exposed_bytes"],
+    }
+    if not args.quiet:
+        print(f"bit_identical={bit} reduction_256k="
+              f"{top['scan_bytes_reduction']:.1f}x "
+              f"hidden_fraction={ro['hidden_fraction']:.3f}")
+    if not args.no_json:
+        bench_json("longctx", {**p, "smoke": args.smoke}, metrics)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

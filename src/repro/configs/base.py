@@ -190,7 +190,11 @@ SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
 @dataclass(frozen=True)
 class FreeKVConfig:
     method: str = "freekv"      # freekv | full | streaming | raas | quest |
-                                # arkvale | shadowkv | infinigen
+                                # arkvale | shadowkv | infinigen | centroid
+    # ``retriever`` is an alias for ``method`` (the serving-facing name):
+    # FreeKVConfig(retriever="centroid") == FreeKVConfig(method="centroid").
+    # When both are given, ``retriever`` wins.
+    retriever: str = ""
     page_size: int = 32
     budget: int = 2048          # B — tokens resident on device
     n_sink: int = 128           # S
@@ -287,6 +291,23 @@ class FreeKVConfig:
     # tiny score all-gather re-ranks them globally — restores global top-k
     # whenever no shard holds more than os*k/mp of the true top-k.
     sharded_overselect: int = 1
+    # Centroid-then-token selection (method="centroid", core/centroid_index):
+    # per-(layer, kv-head) k-means-style centroids over the host-pool page
+    # summaries turn the per-step selection scan from O(n_pages) into
+    # O(centroid_count + candidate pages). Clusters carry hierarchical
+    # min-max bounding boxes (cluster box = elementwise min/max over member
+    # pages' boxes), so the query-vs-centroid score is a true Quest-style
+    # upper bound on every member page's score. Corrected heads always fall
+    # back to the exact full scan, so mis-clustered heads are corrected
+    # rather than lost (see docs/methods.md).
+    centroid_count: int = 16
+    # re-center cadence, in completed pages: every N-th page completion the
+    # index recomputes the centroid means from the current assignments and
+    # reassigns every page against the new means (one cheap k-means
+    # iteration); between re-centers pages are assigned incrementally
+    # against the frozen snapshot, keeping the index bit-reproducible by a
+    # full rebuild at any time (tests/test_centroid_index.py).
+    centroid_refresh_interval: int = 4
     # Tensor-parallel serving (ServeEngine(tp>1)): every retrieval-side state
     # leaf (pool + quant scales, summaries, sink/window rings, selection
     # buffers) is sharded per KV-head group over a 1-D ('model',) mesh and
@@ -298,6 +319,10 @@ class FreeKVConfig:
     # (per-head full top-k) selection — unlike the page-sharded approximate
     # ``sharded_retrieval`` path, with which it is mutually exclusive.
     tp_serving: bool = False
+
+    def __post_init__(self):
+        if self.retriever:
+            object.__setattr__(self, "method", self.retriever)
 
     @property
     def quant_bits(self) -> int:

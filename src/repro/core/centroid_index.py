@@ -1,0 +1,331 @@
+"""Centroid-then-token page selection (the ninth retriever, method="centroid").
+
+FreeKV's exact selection scans every host-pool page summary each decode step
+— O(n_pages) per step, the dominant cost once contexts approach ~1M tokens.
+This module maintains a CTkvr-style two-level index over the page summaries:
+
+  * per-(layer, kv-head) **centroids** partition the pages into
+    ``fkv.centroid_count`` clusters (k-means on page-summary midpoints);
+  * each cluster carries a **hierarchical min-max bounding box** — the
+    elementwise min/max over its member pages' (lo, hi) summaries — so the
+    Quest score of a query against a cluster box is a TRUE upper bound on
+    the score of any member page;
+  * selection scores the query against the ``C`` cluster boxes first
+    (``kernels/centroid_scores.py``), lets pages inherit their cluster's
+    pooled upper bound, keeps the top ``COVER_PAGES_FACTOR * n_sel``
+    candidate pages, and runs the existing exact page scoring only on that
+    gathered candidate set — O(C + candidates) instead of O(n_pages).
+
+Index maintenance is designed so the incremental state is reproducible by a
+full rebuild at ANY time (``tests/test_centroid_index.py`` property (b)):
+
+  * the centroid means are a frozen **snapshot**: they change only at the
+    periodic re-center (every ``fkv.centroid_refresh_interval`` completed
+    pages) and at the prefill build;
+  * every page is assigned by the same pure function of (its summary, the
+    snapshot) — incrementally at page completion (``update_on_append``),
+    and for ALL pages at each re-center — so at every step each valid
+    page's assignment equals ``argmin`` against the current snapshot;
+  * cluster counts (int sums) and bounding boxes (min/max merges) are
+    order-independent and exactly associative, hence ``rebuild`` — which
+    recomputes assignments and stats from (summaries, snapshot) alone, the
+    swap-in path — matches the incrementally maintained leaves bit-for-bit
+    after any append/offload/swap_out/swap_in sequence.
+
+Physicality follows the repo convention: the jnp ops here compute full-width
+with masking; the per-step *cost* of the index (pages assigned, candidates
+scored) is accounted from counts (``benchmarks/longctx_selection.py``), and
+the Pallas stage-1 kernel does the physical C-sized scan.
+
+State leaves (ride the decode state through jit, donation, slot splice,
+preemption swap and the TP shard_map; specs in ``sharding/rules``):
+
+  cent        (B, C, kv, 2, d)   cluster bounding boxes (lo, hi)
+  cent_mean   (B, C, kv, d) f32  centroid means (the assignment snapshot)
+  cent_assign (B, n_pages, kv)   page -> cluster id, -1 = not offloaded
+  cent_count  (B, C, kv) int32   member pages per cluster
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, FreeKVConfig
+from repro.core import selection
+
+NEG_INF = -1e30
+# candidate pages kept after stage 1, as a multiple of n_sel: enough slack
+# that the union of winning clusters' pages covers the exact top-k on
+# clustered key distributions (coverage is asserted, not assumed, by the
+# bit-identity tests; corrected heads fall back to the exact scan anyway)
+COVER_PAGES_FACTOR = 4
+_BIG = jnp.float32(jnp.finfo(jnp.float32).max)
+
+
+def candidate_count(n_pages: int, n_sel: int) -> int:
+    return min(n_pages, COVER_PAGES_FACTOR * n_sel)
+
+
+# ---------------------------------------------------------------------------
+# leaves
+# ---------------------------------------------------------------------------
+def init_index(batch, n_pages, n_cent, kv, d, dtype):
+    """Empty index leaves (merged into the retriever's decode state)."""
+    return {
+        "cent": jnp.zeros((batch, n_cent, kv, 2, d), dtype),
+        "cent_mean": jnp.zeros((batch, n_cent, kv, d), jnp.float32),
+        "cent_assign": jnp.full((batch, n_pages, kv), -1, jnp.int32),
+        "cent_count": jnp.zeros((batch, n_cent, kv), jnp.int32),
+    }
+
+
+def page_mid(summ):
+    """(B, N, kv, 2, d) summaries -> (B, N, kv, d) f32 box midpoints."""
+    lo = summ[..., 0, :].astype(jnp.float32)
+    hi = summ[..., 1, :].astype(jnp.float32)
+    return 0.5 * (lo + hi)
+
+
+def _dist2(mid, mean):
+    """Squared distances. mid (B, N, kv, d) f32; mean (B, C, kv, d) f32
+    -> (B, N, kv, C) f32.
+
+    Elementwise (sub, square, reduce-last-axis) rather than a matmul
+    expansion: the per-element reduction order over d is then identical for
+    the single-page incremental call and the full-width rebuild, which is
+    what makes incremental assignment bit-reproducible."""
+    m = mean.transpose(0, 2, 1, 3)                     # (B, kv, C, d)
+    diff = mid[:, :, :, None, :] - m[:, None, :, :, :]  # (B, N, kv, C, d)
+    return (diff * diff).sum(-1)
+
+
+def assign_pages(summ, cent_mean, valid):
+    """Assign every valid page to its nearest centroid.
+
+    valid (B, N) bool (page fully offloaded). Returns (B, N, kv) int32
+    with -1 for invalid pages. Ties break to the lowest cluster id
+    (jnp.argmin), identically in every caller."""
+    a = jnp.argmin(_dist2(page_mid(summ), cent_mean), axis=-1)
+    return jnp.where(valid[:, :, None], a, -1).astype(jnp.int32)
+
+
+def rebuild_stats(summ, assign, n_cent, dtype):
+    """Cluster counts + bounding boxes from scratch, via scatter-min/max
+    (order-independent, exactly associative -> bit-equal to any
+    incremental min/max-merge maintenance of the same assignment set)."""
+    B, N, kv = assign.shape
+    d = summ.shape[-1]
+    lo = summ[..., 0, :].astype(jnp.float32)           # (B, N, kv, d)
+    hi = summ[..., 1, :].astype(jnp.float32)
+    ok = assign >= 0
+    safe = jnp.where(ok, assign, 0)
+    bI = jnp.arange(B)[:, None, None]
+    kI = jnp.arange(kv)[None, None, :]
+    c_lo = jnp.full((B, n_cent, kv, d), _BIG).at[bI, safe, kI].min(
+        jnp.where(ok[..., None], lo, _BIG))
+    c_hi = jnp.full((B, n_cent, kv, d), -_BIG).at[bI, safe, kI].max(
+        jnp.where(ok[..., None], hi, -_BIG))
+    count = jnp.zeros((B, n_cent, kv), jnp.int32).at[bI, safe, kI].add(
+        ok.astype(jnp.int32))
+    empty = (count == 0)[..., None]
+    cent = jnp.stack([jnp.where(empty, 0.0, c_lo),
+                      jnp.where(empty, 0.0, c_hi)], axis=3)
+    return cent.astype(dtype), count
+
+
+def recompute_means(summ, assign, n_cent, prev_mean):
+    """Segment means of member-page midpoints; empty clusters keep their
+    previous mean (so they can repopulate as the distribution drifts)."""
+    B, N, kv = assign.shape
+    d = summ.shape[-1]
+    mid = page_mid(summ)
+    ok = assign >= 0
+    safe = jnp.where(ok, assign, 0)
+    bI = jnp.arange(B)[:, None, None]
+    kI = jnp.arange(kv)[None, None, :]
+    s = jnp.zeros((B, n_cent, kv, d), jnp.float32).at[bI, safe, kI].add(
+        jnp.where(ok[..., None], mid, 0.0))
+    n = jnp.zeros((B, n_cent, kv), jnp.int32).at[bI, safe, kI].add(
+        ok.astype(jnp.int32))
+    mean = s / jnp.maximum(n, 1)[..., None]
+    return jnp.where((n > 0)[..., None], mean, prev_mean)
+
+
+# ---------------------------------------------------------------------------
+# build / rebuild
+# ---------------------------------------------------------------------------
+def build(summ, length, n_cent, page_size, dtype, iters=2):
+    """Prefill-time index construction: strided seeds + ``iters`` k-means
+    refinements + a final assign-all, so the invariant 'every assignment is
+    argmin against the current snapshot' holds from the first decode step."""
+    B, N = summ.shape[:2]
+    n_done = length // page_size                       # (B,)
+    valid = jnp.arange(N)[None, :] < n_done[:, None]
+    mid = page_mid(summ)
+    c = jnp.arange(n_cent)
+    seed = jnp.clip((c[None, :] * jnp.maximum(n_done, 1)[:, None]) // n_cent,
+                    0, N - 1)                          # (B, C)
+    mean = mid[jnp.arange(B)[:, None], seed]           # (B, C, kv, d)
+    for _ in range(iters):
+        a = assign_pages(summ, mean, valid)
+        mean = recompute_means(summ, a, n_cent, mean)
+    a = assign_pages(summ, mean, valid)
+    cent, count = rebuild_stats(summ, a, n_cent, dtype)
+    return {"cent": cent, "cent_mean": mean, "cent_assign": a,
+            "cent_count": count}
+
+
+def rebuild(state, page_size):
+    """Exact rebuild from (summaries, mean snapshot, length) alone — the
+    swap-in path, and the oracle the property tests compare the
+    incrementally maintained leaves against (bit-equality)."""
+    summ = state["summ"]
+    n_cent = state["cent_mean"].shape[1]
+    n_done = state["length"] // page_size
+    valid = jnp.arange(summ.shape[1])[None, :] < n_done[:, None]
+    a = assign_pages(summ, state["cent_mean"], valid)
+    cent, count = rebuild_stats(summ, a, n_cent, state["cent"].dtype)
+    return {"cent": cent, "cent_mean": state["cent_mean"],
+            "cent_assign": a, "cent_count": count}
+
+
+# ---------------------------------------------------------------------------
+# incremental maintenance (decode append / offload)
+# ---------------------------------------------------------------------------
+def update_on_append(state, fkv: FreeKVConfig):
+    """Index maintenance after ``paging.append_token``: assign the page that
+    just completed (if any) against the frozen mean snapshot, min/max-merge
+    its box into its cluster, then — every ``centroid_refresh_interval``
+    completed pages — one cheap k-means step (re-center + reassign-all +
+    exact stat rebuild). All updates are per-row masked on page completion."""
+    p = fkv.page_size
+    length = state["length"]                           # post-append
+    page_done = (length % p) == 0                      # (B,)
+    page_idx = length // p - 1
+    safe_pi = jnp.where(page_done, page_idx, 0)
+    B = length.shape[0]
+    n_cent = state["cent_mean"].shape[1]
+    kv = state["cent_mean"].shape[2]
+
+    # -- assign the completed page (same distance fn as the full rebuild)
+    row = state["summ"][jnp.arange(B), safe_pi]        # (B, kv, 2, d)
+    a = jnp.argmin(_dist2(page_mid(row[:, None]), state["cent_mean"]),
+                   axis=-1)[:, 0].astype(jnp.int32)    # (B, kv)
+    bI = jnp.arange(B)[:, None]
+    kI = jnp.arange(kv)[None, :]
+    old_a = state["cent_assign"][bI, safe_pi[:, None], kI]
+    assign = state["cent_assign"].at[bI, safe_pi[:, None], kI].set(
+        jnp.where(page_done[:, None], a, old_a))
+
+    # -- count += 1, bounds min/max-merge for the page's cluster
+    old_n = state["cent_count"][bI, a, kI]
+    count = state["cent_count"].at[bI, a, kI].set(
+        old_n + page_done[:, None].astype(jnp.int32))
+    box = row.astype(jnp.float32)                      # (B, kv, 2, d)
+    old_box = state["cent"][bI, a, kI].astype(jnp.float32)
+    merged = jnp.stack([jnp.minimum(old_box[:, :, 0], box[:, :, 0]),
+                        jnp.maximum(old_box[:, :, 1], box[:, :, 1])], axis=2)
+    new_box = jnp.where((old_n > 0)[..., None, None], merged, box)
+    new_box = jnp.where(page_done[:, None, None, None], new_box, old_box)
+    cent = state["cent"].at[bI, a, kI].set(new_box.astype(state["cent"].dtype))
+    st = dict(state, cent=cent, cent_assign=assign, cent_count=count)
+
+    # -- periodic re-center (one masked k-means iteration per row)
+    n_done = length // p
+    recen = page_done & (n_done % max(fkv.centroid_refresh_interval, 1) == 0)
+    mean2 = recompute_means(st["summ"], st["cent_assign"], n_cent,
+                            st["cent_mean"])
+    valid = jnp.arange(st["summ"].shape[1])[None, :] < n_done[:, None]
+    a2 = assign_pages(st["summ"], mean2, valid)
+    cent2, count2 = rebuild_stats(st["summ"], a2, n_cent, cent.dtype)
+    r1 = recen[:, None]
+    return dict(
+        st,
+        cent_mean=jnp.where(recen[:, None, None, None], mean2,
+                            st["cent_mean"]),
+        cent_assign=jnp.where(r1[..., None], a2, st["cent_assign"]),
+        cent=jnp.where(recen[:, None, None, None, None], cent2, st["cent"]),
+        cent_count=jnp.where(r1[..., None], count2, st["cent_count"]))
+
+
+# ---------------------------------------------------------------------------
+# two-stage selection
+# ---------------------------------------------------------------------------
+def cluster_scores(cfg: ArchConfig, fkv: FreeKVConfig, q, state,
+                   use_kernels=False):
+    """Stage 1: query vs cluster bounding boxes -> (B, kv, C) f32 pooled
+    upper bounds (group max — an upper bound for every head in the group);
+    empty clusters score NEG_INF."""
+    B, H, d = q.shape
+    kv = cfg.n_kv_heads
+    G = H // kv
+    scale = cfg.attn_scale if cfg.attn_scale is not None else 1.0 / (d ** 0.5)
+    if use_kernels:
+        from repro.kernels import ops
+        s = ops.centroid_scores(q.reshape(B, kv, G, d), state["cent"],
+                                state["cent_count"], scale=scale,
+                                interpret=ops.resolve_interpret(fkv))
+    else:
+        sh = selection.page_scores_minmax(q, state["cent"], scale)  # (B,H,C)
+        s = sh.reshape(B, kv, G, -1)
+        s = jnp.where((state["cent_count"].transpose(0, 2, 1) > 0)
+                      [:, :, None, :], s, NEG_INF)
+    return s.max(axis=2)                               # (B, kv, C)
+
+
+def candidate_pages(cl_scores, cent_assign, valid, m):
+    """Pages inherit their cluster's pooled upper bound; keep the top-``m``
+    selectable pages per (batch, kv-head). Returns (B, kv, m) int32 page
+    ids, -1-padded, ordered by inherited score (cluster-major)."""
+    a = cent_assign.transpose(0, 2, 1)                 # (B, kv, N)
+    safe = jnp.where(a >= 0, a, 0)
+    inh = jnp.take_along_axis(cl_scores, safe, axis=-1)
+    ok = (a >= 0) & valid[:, None, :]
+    inh = jnp.where(ok, inh, NEG_INF)
+    top_s, top_i = jax.lax.top_k(inh, m)
+    return jnp.where(top_s > NEG_INF / 2, top_i, -1).astype(jnp.int32)
+
+
+def centroid_select(cfg: ArchConfig, fkv: FreeKVConfig, q, state, n_sel,
+                    use_kernels=False):
+    """Full centroid-then-token selection.
+
+    Returns (idx (B, kv, n_sel) int32 page ids -1-padded, cand_idx
+    (B, kv, m)). Stage 2 scores ONLY the gathered candidate summaries with
+    the existing page scoring (kernel or jnp) — per-page scores are
+    independent of the rest of the set, so under the non-softmax pooling
+    modes the result is bit-equal to the exact top-k whenever the
+    candidates cover it (docs/methods.md)."""
+    B, H, d = q.shape
+    kv = cfg.n_kv_heads
+    N = state["summ"].shape[1]
+    scale = cfg.attn_scale if cfg.attn_scale is not None else 1.0 / (d ** 0.5)
+    cs = cluster_scores(cfg, fkv, q, state, use_kernels=use_kernels)
+    valid = selection.selectable_mask(cfg, fkv, N, state["length"])
+    m = candidate_count(N, n_sel)
+    cand_idx = candidate_pages(cs, state["cent_assign"], valid, m)
+
+    # gather candidate summaries per kv head: (B, m, kv, 2, d) where each
+    # head's page axis holds its own candidates
+    safe = jnp.clip(cand_idx, 0, N - 1)
+    bI = jnp.arange(B)[:, None, None]
+    kI = jnp.arange(kv)[None, :, None]
+    summ_c = state["summ"][bI, safe, kI].transpose(0, 2, 1, 3, 4)
+    if use_kernels:
+        from repro.kernels import ops
+        scores = ops.page_scores(
+            q.reshape(B, kv, H // kv, d), summ_c, scale=scale,
+            interpret=ops.resolve_interpret(fkv)).reshape(B, H, -1)
+    else:
+        scores = selection.page_scores_minmax(q, summ_c, scale)   # (B,H,m)
+    ok = cand_idx >= 0                                 # (B, kv, m)
+    pooled = selection.group_consistent_scores(cfg, scores, ok,
+                                               fkv.group_pool)
+    k = min(n_sel, m)
+    top_s, top_i = jax.lax.top_k(pooled, k)
+    idx = jnp.take_along_axis(cand_idx, top_i.astype(jnp.int32), axis=2)
+    idx = jnp.where(top_s > NEG_INF / 2, idx, -1)
+    if k < n_sel:
+        pad = jnp.full(idx.shape[:-1] + (n_sel - k,), -1, jnp.int32)
+        idx = jnp.concatenate([idx, pad], axis=-1)
+    return idx, cand_idx

@@ -19,6 +19,8 @@ Methods:
   raas       dynamic dropping with recency timestamps (no pool)
   streaming  sink + window only (StreamingLLM / Razor-style static)
   full       exact dense cache (oracle)
+  centroid   centroid-then-token two-level selection (CTkvr-style) inside
+             the FreeKV speculative + correction machinery
 """
 from __future__ import annotations
 
@@ -29,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, FreeKVConfig
-from repro.core import paging, recall, selection
+from repro.core import centroid_index, paging, recall, selection
 from repro.core.correction import corrected_heads
 from repro.core.recall_pipeline import RecallExecutor, match_resident
 from repro.models.layers import softcap
@@ -271,23 +273,8 @@ class FreeKVRetriever:
             return o, state, info
 
         state = paging.append_token(state, k_new, v_new)
-
-        # --- selection (off critical path for FreeKV: overlaps compute) ----
-        q_sel = q
-        if self.proxy_query and q_proxy is not None:
-            q_sel = q_proxy
-        with annotate(SPAN_RECALL_SELECT):
-            new_idx, _ = selection.select_pages(
-                cfg, fkv, q_sel, state["summ"], state["length"],
-                self._n_sel(state))
-        n_sel = new_idx.shape[2]
+        state = self._post_append(state)
         B = q.shape[0]
-        reused = jnp.zeros((B,), jnp.int32)
-        # speculation quality (repro.obs): how much of the new selection the
-        # previous step's speculative buffer already holds
-        sel_pages = jnp.sum(new_idx >= 0, axis=(1, 2))
-        spec_hit = jnp.sum(match_resident(new_idx, state["sel_idx"])[0],
-                           axis=(1, 2))
 
         if self.speculative:
             with annotate(SPAN_RECALL_CORRECTION):
@@ -298,6 +285,20 @@ class FreeKVRetriever:
         else:                                        # ArkVale/InfiniGen: always fresh
             corr = jnp.ones((B, cfg.n_kv_heads), bool)
             sim = jnp.zeros((B, cfg.n_kv_heads), jnp.float32)
+
+        # --- selection (off critical path for FreeKV: overlaps compute) ----
+        q_sel = q
+        if self.proxy_query and q_proxy is not None:
+            q_sel = q_proxy
+        with annotate(SPAN_RECALL_SELECT):
+            new_idx, sel_info = self._select_indices(state, q_sel, corr)
+        n_sel = new_idx.shape[2]
+        reused = jnp.zeros((B,), jnp.int32)
+        # speculation quality (repro.obs): how much of the new selection the
+        # previous step's speculative buffer already holds
+        sel_pages = jnp.sum(new_idx >= 0, axis=(1, 2))
+        spec_hit = jnp.sum(match_resident(new_idx, state["sel_idx"])[0],
+                           axis=(1, 2))
 
         if self._overlap():
             # --- pipelined (§4): correction top-up on the critical path,
@@ -347,7 +348,74 @@ class FreeKVRetriever:
             "churn_pages": sel_pages - spec_hit,
             "granularity": "token" if self.token_wise_recall else "page",
         }
+        info.update(sel_info)
         return o, state, info
+
+    # -- subclass hooks ------------------------------------------------
+    def _post_append(self, state):
+        """Retriever-owned index maintenance after the token append (the
+        centroid retriever keeps its two-level index in sync here)."""
+        return state
+
+    def _select_indices(self, state, q_sel, corr):
+        """Selection hook -> (new_idx (B, kv, n_sel), extra info). ``corr``
+        lets subclasses route corrected heads to an exact scan."""
+        new_idx, _ = selection.select_pages(
+            self.cfg, self.fkv, q_sel, state["summ"], state["length"],
+            self._n_sel(state))
+        return new_idx, {}
+
+
+class CentroidRetriever(FreeKVRetriever):
+    """Centroid-then-token selection (CTkvr-style two-level index over the
+    page summaries, ``core/centroid_index``): per-step selection scans the
+    C cluster bounding boxes plus a bounded candidate set instead of every
+    page summary — the ~1M-token regime where the exact scan dominates.
+
+    Runs inside the same speculative-recall + correction machinery:
+    speculative selection is two-stage (approximate), while **corrected
+    heads always re-select with the exact full scan**, so mis-clustered
+    heads are corrected rather than lost. With correction on the greedy
+    output is bit-identical to ``freekv`` whenever the candidate set covers
+    the exact top-k (structural for the non-softmax pooling modes; see
+    docs/methods.md for the softmax-pooling caveat)."""
+
+    def __init__(self, cfg, fkv, mesh=None):
+        assert not fkv.sharded_retrieval, \
+            "method='centroid' composes with tp_serving, not sharded_retrieval"
+        super().__init__(cfg, fkv, speculative=True, mesh=mesh)
+
+    def init_state(self, batch, max_len, dtype=jnp.bfloat16):
+        st = super().init_state(batch, max_len, dtype)
+        st.update(centroid_index.init_index(
+            st["length"].shape[0], st["pool"].shape[1],
+            self.fkv.centroid_count, self.cfg.n_kv_heads, self.cfg.d_head,
+            st["summ"].dtype))
+        return st
+
+    def prefill(self, state, k, v, q_last):
+        st = super().prefill(state, k, v, q_last)
+        st.update(centroid_index.build(
+            st["summ"], st["length"], self.fkv.centroid_count,
+            self.fkv.page_size, st["cent"].dtype))
+        return st
+
+    def _post_append(self, state):
+        return centroid_index.update_on_append(state, self.fkv)
+
+    def _select_indices(self, state, q_sel, corr):
+        # Corrected heads re-select via the exact full scan (its cost is
+        # charged to corrected heads only — the jnp path computes full-width
+        # with masking per repo convention, counts are the source of truth);
+        # uncorrected heads take the two-stage centroid selection.
+        exact_idx, _ = selection.select_pages(
+            self.cfg, self.fkv, q_sel, state["summ"], state["length"],
+            self._n_sel(state))
+        cent_idx, cand_idx = centroid_index.centroid_select(
+            self.cfg, self.fkv, q_sel, state, self._n_sel(state),
+            use_kernels=self.use_kernels)
+        new_idx = jnp.where(corr[:, :, None], exact_idx, cent_idx)
+        return new_idx, {"cand_pages": jnp.sum(cand_idx >= 0, axis=(1, 2))}
 
 
 class QuestRetriever(FreeKVRetriever):
@@ -707,7 +775,7 @@ class ShadowKVRetriever(FreeKVRetriever):
 
 
 METHODS = ("freekv", "arkvale", "infinigen", "quest", "shadowkv", "raas",
-           "streaming", "full")
+           "streaming", "full", "centroid")
 
 
 def make_retriever(cfg: ArchConfig, fkv: FreeKVConfig, mesh=None):
@@ -722,6 +790,8 @@ def make_retriever(cfg: ArchConfig, fkv: FreeKVConfig, mesh=None):
     m = fkv.method
     if m == "freekv":
         return FreeKVRetriever(cfg, fkv, speculative=True, mesh=mesh)
+    if m == "centroid":
+        return CentroidRetriever(cfg, fkv, mesh=mesh)
     if m == "arkvale":
         return FreeKVRetriever(cfg, fkv, speculative=False, mesh=mesh)
     if m == "infinigen":

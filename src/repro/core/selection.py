@@ -52,19 +52,23 @@ def group_consistent_scores(cfg: ArchConfig, scores, valid, mode="mean_softmax")
     modes: mean_softmax (MeanS, paper) | max_softmax | mean_qk | max_qk
     (the q-pooling variants MaxQ/MeanQ pool q before scoring — see
     ``select_pages``'s q_pool argument).
+
+    ``valid`` is (B, n_pages) shared across kv heads, or (B, kv, n) when the
+    page axis is per-head (the centroid retriever's gathered candidates).
     """
     B, H, n = scores.shape
     kv = cfg.n_kv_heads
     G = H // kv
+    ok = valid if valid.ndim == 3 else valid[:, None, :]   # (B, kv, n)
     s = scores.reshape(B, kv, G, n)
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    s = jnp.where(ok[:, :, None, :], s, NEG_INF)
     if mode.endswith("softmax"):
         s = jax.nn.softmax(s, axis=-1)
     if mode.startswith("mean"):
         pooled = s.mean(axis=2)
     else:
         pooled = s.max(axis=2)
-    return jnp.where(valid[:, None, :], pooled, NEG_INF)
+    return jnp.where(ok, pooled, NEG_INF)
 
 
 def select_pages(cfg: ArchConfig, fkv: FreeKVConfig, q, summ, length, n_sel,

@@ -139,7 +139,7 @@ class TPGroupShardedRetriever:
     # to their exact global integer values (includes the speculation-quality
     # telemetry so per-step hit/churn counts stay exact under tp>1)
     _COUNTERS = ("sync_pages", "async_pages", "reused_pages", "sel_pages",
-                 "spec_hit_pages", "churn_pages")
+                 "spec_hit_pages", "churn_pages", "cand_pages")
 
     def _hspec(self):
         return P(None, "model", None)          # (B, H|kv, d) head-dim shard

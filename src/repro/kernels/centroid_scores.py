@@ -1,0 +1,62 @@
+"""Pallas kernel: query vs centroid bounding-box scoring (stage 1 of the
+centroid-then-token retriever, ``core/centroid_index``).
+
+score[g, c] = scale * sum_d max(q[g,d] * lo[c,d], q[g,d] * hi[c,d])
+
+with (lo, hi) the hierarchical bounding box of cluster ``c`` — the
+elementwise min/max over its member pages' Quest summaries — so the score is
+a true upper bound on any member page's score. Empty clusters (count == 0)
+score NEG_INF so they can never win a candidate slot.
+
+The centroid count C is small (tens) by construction, so a single grid cell
+per (batch, kv-head) holds the whole C axis; no page-axis tiling is needed.
+Interpret-mode parity with ``ref.centroid_scores_ref`` is covered by
+``tests/test_centroid_index.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, lo_ref, hi_ref, cnt_ref, o_ref, *, scale):
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, d)
+    lo = lo_ref[0, :, 0].astype(jnp.float32)       # (C, d)
+    hi = hi_ref[0, :, 0].astype(jnp.float32)
+    cnt = cnt_ref[0, :, 0]                         # (C,)
+    # sum_d max(q*lo, q*hi) == relu(q) @ hi^T + min(q,0) @ lo^T  (lo <= hi)
+    dot = lambda a, b: jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    s = (dot(jnp.maximum(q, 0), hi) + dot(jnp.minimum(q, 0), lo)) * scale
+    s = jnp.where((cnt > 0)[None, :], s, NEG_INF)
+    o_ref[0, 0] = s.astype(o_ref.dtype)
+
+
+def centroid_scores(q, cent, count, *, scale, interpret=None):
+    """q (B, kv, G, d); cent (B, C, kv, 2, d); count (B, C, kv) int32
+    -> (B, kv, G, C) f32 upper-bound scores, NEG_INF for empty clusters."""
+    if interpret is None:
+        from repro.kernels.page_scores import default_interpret
+        interpret = default_interpret()
+    B, kv, G, d = q.shape
+    C = cent.shape[1]
+    lo, hi = cent[..., 0, :], cent[..., 1, :]      # (B, C, kv, d)
+    kern = functools.partial(_kernel, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(B, kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, d), lambda b, k: (b, k, 0, 0)),
+            pl.BlockSpec((1, C, 1, d), lambda b, k: (b, 0, k, 0)),
+            pl.BlockSpec((1, C, 1, d), lambda b, k: (b, 0, k, 0)),
+            pl.BlockSpec((1, C, 1), lambda b, k: (b, 0, k)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, C), lambda b, k: (b, k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, kv, G, C), jnp.float32),
+        interpret=interpret,
+    )(q, lo, hi, count)

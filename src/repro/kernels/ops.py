@@ -11,6 +11,7 @@ import functools
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.centroid_scores import centroid_scores as _centroid
 from repro.kernels.flash_prefill import flash_prefill as _flash
 from repro.kernels.page_scores import default_interpret as _default_interpret
 from repro.kernels.page_scores import page_scores as _scores
@@ -56,6 +57,13 @@ def page_scores(q, summ, *, scale, block_pages=128, interpret=None):
                    interpret=interpret)
 
 
+def centroid_scores(q, cent, count, *, scale, interpret=None):
+    """Stage-1 centroid-box scoring for the centroid retriever: q vs the
+    C cluster bounding boxes (C << n_pages); empty clusters -> NEG_INF."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _centroid(q, cent, count, scale=scale, interpret=interpret)
+
+
 def recall_gather(pool, idx, *, chunk=None, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
     return _recall(pool, idx, chunk=chunk, interpret=interpret)
@@ -99,6 +107,7 @@ REFS = {
     "paged_attention": ref.paged_attention_ref,
     "page_summary": ref.page_summary_ref,
     "page_scores": ref.page_scores_ref,
+    "centroid_scores": ref.centroid_scores_ref,
     "recall_gather": ref.recall_gather_ref,
     "flash_prefill": ref.flash_prefill_ref,
 }

@@ -28,6 +28,15 @@ def page_scores_ref(q, summ, scale):
     return jnp.maximum(e_lo, e_hi).sum(-1) * scale
 
 
+def centroid_scores_ref(q, cent, count, scale):
+    """q (B, kv, G, d); cent (B, C, kv, 2, d); count (B, C, kv)
+    -> (B, kv, G, C). Quest scoring against cluster bounding boxes;
+    empty clusters (count == 0) score NEG_INF."""
+    s = page_scores_ref(q, cent, scale)           # (B,kv,G,C)
+    ok = count.transpose(0, 2, 1)[:, :, None, :] > 0
+    return jnp.where(ok, s, -1e30)
+
+
 def paged_attention_ref(q, k_pages, v_pages, page_pos, cur_pos, scale,
                         softcap=None):
     """Decode attention over per-KV-head page sets.

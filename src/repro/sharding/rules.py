@@ -152,6 +152,11 @@ def decode_state_spec(cfg: ArchConfig, mesh, path: str, leaf,
         if _div(n_pages, mesh, page_axes):
             return out(page_axes, *([None] * (nd - 2)))
         return out(*([None] * (nd - 1)))
+    if key in ("cent", "cent_mean", "cent_assign", "cent_count"):
+        # centroid index (core/centroid_index): kv on axis 2 like summ —
+        # cent (B, C, kv, 2, d), cent_mean (B, C, kv, d),
+        # cent_assign (B, n_pages, kv), cent_count (B, C, kv)
+        return out(None, "model" if kv_div else None, *([None] * (nd - 3)))
     if key in ("sel_k", "sel_v"):                    # (B, kv, n_sel, p, d)
         return out("model" if kv_div else None, None, None, None)
     if key in ("sel_idx",):

@@ -13,7 +13,8 @@ from repro.configs.base import FreeKVConfig
 
 # Modules kept whole on one shard: their session-scoped fixture (a multi-
 # device subprocess driver) would otherwise re-run once per shard.
-_ATOMIC_MODULES = {"test_sharded_serving.py", "test_preemption.py"}
+_ATOMIC_MODULES = ("test_centroid_index.py", "test_preemption.py",
+                   "test_sharded_serving.py")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -21,7 +22,9 @@ def pytest_collection_modifyitems(config, items):
 
     ``PYTEST_SHARD_COUNT=N PYTEST_SHARD_ID=i`` keeps every N-th collected
     item (round-robin, so heavy parametrized groups spread evenly), except
-    for _ATOMIC_MODULES which are pinned to one shard by a stable name hash.
+    for _ATOMIC_MODULES which are pinned whole — one module per shard by its
+    position in the (sorted) tuple, so the heavy subprocess drivers land on
+    DIFFERENT shards instead of hashing onto the same one.
     Unset / count<=1 runs everything (local default)."""
     count = int(os.environ.get("PYTEST_SHARD_COUNT", "0") or 0)
     if count <= 1:
@@ -32,7 +35,7 @@ def pytest_collection_modifyitems(config, items):
     for item in items:
         fname = os.path.basename(str(item.fspath))
         if fname in _ATOMIC_MODULES:
-            key = sum(ord(c) for c in fname)      # stable across machines
+            key = _ATOMIC_MODULES.index(fname)    # stable across machines
         else:
             key = idx
             idx += 1

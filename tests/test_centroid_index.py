@@ -1,0 +1,381 @@
+"""Centroid-then-token retriever (core/centroid_index, method="centroid").
+
+Property coverage (ISSUE 9):
+  (a) whenever the candidate set (union of winning clusters' pages) covers
+      the exact top-k, the centroid selection equals the exact selection —
+      and with correction on the final attention output is bit-identical to
+      ``freekv`` (checked per step on seeded drift traffic, plus the
+      all-corrected regime where coverage is irrelevant);
+  (b) the incrementally maintained index equals a full rebuild from the
+      (summaries, mean snapshot) after ANY seeded sequence of
+      append / offload / swap_out / swap_in events — bit-equality of
+      ``cent`` / ``cent_assign`` / ``cent_count``;
+  (c) tp=2 centroid selection equals tp=1 (subprocess driver with two
+      forced host devices, pattern of test_sharded_serving.py), and the
+      mp=1 TP wrapper is semantically invisible in-process.
+
+Plus: kernel interpret-mode parity vs the jnp oracle, the
+``retriever=`` config alias, and the sharding specs of the index leaves.
+
+This module is pinned atomically to one CI shard (tests/conftest.py).
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import FreeKVConfig
+from repro.core import centroid_index, paging, selection
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _fkv(**kw):
+    base = dict(method="centroid", page_size=8, budget=64, n_sink=8,
+                n_window=8, tau=0.8, centroid_count=4,
+                centroid_refresh_interval=3)
+    base.update(kw)
+    return FreeKVConfig(**base)
+
+
+def _prefill(r, cfg, key, B=2, T=160, max_len=512):
+    H, kv, d = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    k = jax.random.normal(key, (B, T, kv, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 1), (B, T, kv, d),
+                          jnp.float32)
+    q0 = jax.random.normal(jax.random.fold_in(key, 2), (B, H, d), jnp.float32)
+    return r.prefill(r.init_state(B, max_len, jnp.float32), k, v, q0), q0
+
+
+def _step_inputs(cfg, key, t, B=2):
+    H, kv, d = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    kq = jax.random.fold_in(key, 100 + t)
+    dq = jax.random.normal(kq, (B, H, d), jnp.float32)
+    kn = jax.random.normal(jax.random.fold_in(kq, 1), (B, kv, d), jnp.float32)
+    vn = jax.random.normal(jax.random.fold_in(kq, 2), (B, kv, d), jnp.float32)
+    return dq, kn, vn
+
+
+# ---------------------------------------------------------------------------
+# config plumbing
+# ---------------------------------------------------------------------------
+def test_retriever_alias_sets_method():
+    assert FreeKVConfig(retriever="centroid").method == "centroid"
+    # when both are given, the serving-facing alias wins
+    assert FreeKVConfig(method="freekv", retriever="centroid").method \
+        == "centroid"
+    assert FreeKVConfig(method="quest").method == "quest"
+
+
+def test_make_retriever_dispatch():
+    from repro.core.retrieval import CentroidRetriever, make_retriever
+    cfg = get_config("granite-3-8b-smoke")
+    r = make_retriever(cfg, _fkv())
+    assert isinstance(r, CentroidRetriever)
+    assert "centroid" in __import__("repro.core.retrieval",
+                                    fromlist=["METHODS"]).METHODS
+
+
+# ---------------------------------------------------------------------------
+# kernel parity (interpret mode vs jnp oracle)
+# ---------------------------------------------------------------------------
+def test_centroid_scores_kernel_parity():
+    from repro.kernels import ops, ref
+    cfg = get_config("granite-3-8b-smoke")
+    H, kv, d = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    B, C, G = 2, 6, H // kv
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (B, kv, G, d), jnp.float32)
+    lo = jax.random.normal(jax.random.fold_in(key, 1), (B, C, kv, d))
+    hi = lo + jnp.abs(jax.random.normal(jax.random.fold_in(key, 2),
+                                        (B, C, kv, d)))
+    cent = jnp.stack([lo, hi], axis=3)
+    cnt = jax.random.randint(jax.random.fold_in(key, 3), (B, C, kv), 0, 3)
+    got = ops.centroid_scores(q, cent, cnt, scale=0.125, interpret=True)
+    want = ref.centroid_scores_ref(q, cent, cnt, 0.125)
+    assert got.shape == (B, kv, G, C)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # empty clusters can never win a candidate slot
+    empty = np.asarray(cnt.transpose(0, 2, 1)) == 0
+    assert (np.asarray(got).transpose(0, 1, 3, 2)[empty] < -1e29).all()
+
+
+# ---------------------------------------------------------------------------
+# (a) coverage => exact selection => bit-identical output
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1])
+def test_coverage_implies_exact_and_bit_identical(seed):
+    """Seeded drift traffic (heads escape correction): at every step the
+    candidate set covers the exact top-k, the centroid selection equals the
+    exact selection (non-softmax pooling), and the decode output is
+    bit-identical to freekv."""
+    from repro.core.retrieval import make_retriever
+    cfg = get_config("granite-3-8b-smoke")
+    fkv = _fkv(group_pool="mean_qk")
+    fkv_ex = dataclasses.replace(fkv, method="freekv")
+    key = jax.random.PRNGKey(seed)
+    r = make_retriever(cfg, fkv)
+    r2 = make_retriever(cfg, fkv_ex)
+    sa, q = _prefill(r, cfg, key)
+    sb, _ = _prefill(r2, cfg, key)
+    B = 2
+    n_uncorr = 0
+    for t in range(24):
+        # slow drift -> high qprev similarity -> uncorrected heads exercise
+        # the speculative centroid path
+        q = q + 0.05 * jax.random.normal(jax.random.fold_in(key, 10 + t),
+                                         q.shape)
+        _, kn, vn = _step_inputs(cfg, key, t)
+        # coverage + selection-equality probe on the post-append state
+        probe = r._post_append(paging.append_token(dict(sa), kn, vn))
+        n_sel = probe["sel_idx"].shape[2]
+        exact_idx, _ = selection.select_pages(
+            cfg, fkv, q, probe["summ"], probe["length"], n_sel)
+        cent_idx, cand = centroid_index.centroid_select(
+            cfg, fkv, q, probe, n_sel)
+        e, c = np.asarray(exact_idx), np.asarray(cand)
+        for b in range(B):
+            for h in range(cfg.n_kv_heads):
+                want = set(e[b, h][e[b, h] >= 0].tolist())
+                have = set(c[b, h][c[b, h] >= 0].tolist())
+                assert want <= have, (t, b, h, want - have)
+        np.testing.assert_array_equal(np.asarray(cent_idx), e)
+        oa, sa, ia = r.decode(sa, q, kn, vn)
+        ob, sb, _ = r2.decode(sb, q, kn, vn)
+        np.testing.assert_array_equal(np.asarray(oa), np.asarray(ob))
+        np.testing.assert_array_equal(np.asarray(sa["sel_idx"]),
+                                      np.asarray(sb["sel_idx"]))
+        n_uncorr += int((~np.asarray(ia["corrected"])).sum())
+    assert n_uncorr > 0, "drift traffic never escaped correction"
+
+
+@pytest.mark.parametrize("overlap", [True, False], ids=["overlap", "sync"])
+@pytest.mark.parametrize("quant", ["none", "int8"])
+def test_bit_identical_vs_freekv_corrected(overlap, quant):
+    """All-corrected regime (random queries, cold-ish tau): correction
+    routes every head to the exact scan, so the output is bit-identical to
+    freekv regardless of cluster quality — mis-clustered heads are
+    corrected, not lost."""
+    from repro.core.retrieval import make_retriever
+    cfg = get_config("granite-3-8b-smoke")
+    fkv = _fkv(recall_overlap=overlap, kv_quant=quant)
+    fkv_ex = dataclasses.replace(fkv, method="freekv")
+    key = jax.random.PRNGKey(7)
+    r = make_retriever(cfg, fkv)
+    r2 = make_retriever(cfg, fkv_ex)
+    sa, _ = _prefill(r, cfg, key)
+    sb, _ = _prefill(r2, cfg, key)
+    ncorr = 0
+    for t in range(12):
+        q, kn, vn = _step_inputs(cfg, key, t)
+        oa, sa, ia = r.decode(sa, q, kn, vn)
+        ob, sb, _ = r2.decode(sb, q, kn, vn)
+        np.testing.assert_array_equal(np.asarray(oa), np.asarray(ob))
+        ncorr += int(np.asarray(ia["corrected"]).sum())
+    assert ncorr > 0
+
+
+# ---------------------------------------------------------------------------
+# (b) incremental == rebuild after any append/offload/swap sequence
+# ---------------------------------------------------------------------------
+def _assert_rebuild_equal(state, page_size, ctx=""):
+    rb = centroid_index.rebuild(state, page_size)
+    for k in ("cent", "cent_assign", "cent_count"):
+        np.testing.assert_array_equal(np.asarray(rb[k]), np.asarray(state[k]),
+                                      err_msg=f"{k} diverged {ctx}")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("quant", ["none", "int8"])
+def test_incremental_matches_rebuild(seed, quant):
+    """Randomized op sequences: decode-append runs (crossing page-completion
+    and re-center boundaries at unaligned phases), interleaved with full
+    swap_out -> host numpy -> swap_in round-trips. After every op the
+    incrementally maintained index leaves are bit-equal to ``rebuild``."""
+    from repro.core.offload import swap_state_to_host
+    from repro.core.retrieval import make_retriever
+    cfg = get_config("granite-3-8b-smoke")
+    fkv = _fkv(kv_quant=quant)
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    r = make_retriever(cfg, fkv)
+    # unaligned prefill length: partially filled last page stays un-indexed
+    T = int(rng.integers(100, 200))
+    st, _ = _prefill(r, cfg, key, T=T)
+    _assert_rebuild_equal(st, fkv.page_size, "after prefill")
+    t = 0
+    for op in range(8):
+        if rng.random() < 0.3:
+            # preemption swap: full host round-trip of every leaf
+            host = swap_state_to_host(st)
+            st = jax.tree.map(jnp.asarray, host)
+            _assert_rebuild_equal(st, fkv.page_size, f"after swap #{op}")
+        else:
+            for _ in range(int(rng.integers(1, 12))):
+                q, kn, vn = _step_inputs(cfg, key, t)
+                t += 1
+                _, st, _ = r.decode(st, q, kn, vn)
+            _assert_rebuild_equal(st, fkv.page_size,
+                                  f"after append run #{op} (t={t})")
+    assert int(st["cent_count"].sum()) > 0
+
+
+def test_slot_splice_preserves_index():
+    """Continuous-batching slot surgery (insert/extract) moves the index
+    leaves with the rest of the state; a spliced-out lane still satisfies
+    the rebuild invariant."""
+    from repro.core.retrieval import make_retriever
+    cfg = get_config("granite-3-8b-smoke")
+    fkv = _fkv()
+    key = jax.random.PRNGKey(11)
+    r = make_retriever(cfg, fkv)
+    st, _ = _prefill(r, cfg, key, B=2)
+    for t in range(5):
+        q, kn, vn = _step_inputs(cfg, key, t)
+        _, st, _ = r.decode(st, q, kn, vn)
+    lane = jax.tree.map(lambda x: paging.slot_read_leaf(x, 1), st)
+    _assert_rebuild_equal(lane, fkv.page_size, "extracted lane")
+
+
+# ---------------------------------------------------------------------------
+# (c) tensor parallelism
+# ---------------------------------------------------------------------------
+def test_tp_wrapper_mp1_bit_identical():
+    """A 1-shard TP wrapper around the centroid retriever is semantically
+    invisible (and jits with the cand_pages counter psum)."""
+    from repro.core.retrieval import make_retriever
+    from repro.core.sharded_retrieval import TPGroupShardedRetriever
+    from repro.launch.mesh import make_tp_mesh
+    cfg = get_config("granite-3-8b-smoke")
+    fkv = _fkv()
+    mesh = make_tp_mesh(1)
+    r_tp = make_retriever(cfg, dataclasses.replace(fkv, tp_serving=True),
+                          mesh=mesh)
+    assert isinstance(r_tp, TPGroupShardedRetriever)
+    r_pl = make_retriever(cfg, fkv)
+    key = jax.random.PRNGKey(0)
+    st_tp, _ = _prefill(r_tp, cfg, key, T=64, max_len=160)
+    st_pl, _ = _prefill(r_pl, cfg, key, T=64, max_len=160)
+
+    def _jit_decode(r):
+        def f(s, q, kn, vn):
+            o, st, info = r.decode(s, q, kn, vn)
+            return o, st, {k: v for k, v in info.items()
+                           if not isinstance(v, str)}
+        return jax.jit(f)
+
+    dec_tp, dec_pl = _jit_decode(r_tp), _jit_decode(r_pl)
+    for t in range(10):
+        q, kn, vn = _step_inputs(cfg, key, t)
+        o_tp, st_tp, i_tp = dec_tp(st_tp, q, kn, vn)
+        o_pl, st_pl, i_pl = dec_pl(st_pl, q, kn, vn)
+        np.testing.assert_array_equal(np.asarray(o_tp), np.asarray(o_pl))
+        np.testing.assert_array_equal(np.asarray(st_tp["cent_assign"]),
+                                      np.asarray(st_pl["cent_assign"]))
+        np.testing.assert_array_equal(np.asarray(i_tp["cand_pages"]),
+                                      np.asarray(i_pl["cand_pages"]))
+
+
+def test_tp_state_specs_shard_centroid_leaves():
+    """The index leaves shard over the KV-head dim (axis 2, like summ)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.sharded_retrieval import tp_state_specs
+    from repro.core.retrieval import make_retriever
+    from repro.launch.mesh import make_tp_mesh
+    cfg = get_config("granite-3-8b-smoke")
+    fkv = _fkv()
+    mesh = make_tp_mesh(1)
+    r = make_retriever(cfg, fkv)
+    st = jax.eval_shape(lambda: r.init_state(2, 96, jnp.float32))
+    specs = tp_state_specs(cfg, mesh, st)
+    assert specs["cent"] == P(None, None, "model", None, None)
+    assert specs["cent_mean"] == P(None, None, "model", None)
+    assert specs["cent_assign"] == P(None, None, "model")
+    assert specs["cent_count"] == P(None, None, "model")
+
+
+@pytest.fixture(scope="session")
+def tp2_report(tmp_path_factory):
+    out = tmp_path_factory.mktemp("tp_centroid") / "report.json"
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    subprocess.run([sys.executable, os.path.abspath(__file__), str(out)],
+                   check=True, timeout=1500, env=env, cwd=REPO)
+    return json.loads(out.read_text())
+
+
+@pytest.mark.parametrize("overlap", [True, False], ids=["overlap", "sync"])
+@pytest.mark.parametrize("quant", ["none", "int8"])
+def test_tp2_centroid_equals_tp1(tp2_report, overlap, quant):
+    r = tp2_report[f"overlap={overlap}/quant={quant}"]
+    assert r["bit_identical"] is True, "tp=2 centroid output diverged"
+    assert r["sel_idx_equal"] is True
+    assert r["cand_pages_equal"] is True
+    assert r["rebuild_ok"] is True
+
+
+def _driver(out_path):
+    """tp=2 vs tp=1 centroid retriever on 2 forced host devices."""
+    from repro.core.retrieval import make_retriever
+    from repro.launch.mesh import make_tp_mesh
+    assert len(jax.devices()) >= 2, jax.devices()
+    cfg = get_config("granite-3-8b-smoke")
+    mesh = make_tp_mesh(2)
+    key = jax.random.PRNGKey(5)
+    report = {}
+    for overlap in (True, False):
+        for quant in ("none", "int8"):
+            fkv = _fkv(recall_overlap=overlap, kv_quant=quant)
+            r2 = make_retriever(
+                cfg, dataclasses.replace(fkv, tp_serving=True), mesh=mesh)
+            r1 = make_retriever(cfg, fkv)
+            s2, q = _prefill(r2, cfg, key, T=64, max_len=160)
+            s1, _ = _prefill(r1, cfg, key, T=64, max_len=160)
+
+            def dec(r):
+                def f(s, q, kn, vn):
+                    o, st, info = r.decode(s, q, kn, vn)
+                    return o, st, {k: v for k, v in info.items()
+                                   if not isinstance(v, str)}
+                return jax.jit(f)
+
+            d2, d1 = dec(r2), dec(r1)
+            bit = sel_eq = cand_eq = True
+            for t in range(10):
+                q = q + 0.05 * jax.random.normal(
+                    jax.random.fold_in(key, 10 + t), q.shape)
+                _, kn, vn = _step_inputs(cfg, key, t)
+                o2, s2, i2 = d2(s2, q, kn, vn)
+                o1, s1, i1 = d1(s1, q, kn, vn)
+                bit &= bool((np.asarray(o2) == np.asarray(o1)).all())
+                sel_eq &= bool((np.asarray(s2["sel_idx"])
+                                == np.asarray(s1["sel_idx"])).all())
+                cand_eq &= bool((np.asarray(i2["cand_pages"])
+                                 == np.asarray(i1["cand_pages"])).all())
+            rb = centroid_index.rebuild(
+                jax.tree.map(np.asarray, s2), fkv.page_size)
+            rebuild_ok = all(
+                bool((np.asarray(rb[k]) == np.asarray(s2[k])).all())
+                for k in ("cent", "cent_assign", "cent_count"))
+            report[f"overlap={overlap}/quant={quant}"] = {
+                "bit_identical": bit, "sel_idx_equal": sel_eq,
+                "cand_pages_equal": cand_eq, "rebuild_ok": rebuild_ok}
+    with open(out_path, "w") as f:
+        json.dump(report, f)
+
+
+if __name__ == "__main__":
+    _driver(sys.argv[1])

@@ -21,7 +21,7 @@ is gated absolutely: the new value may not exceed the tolerance itself.
 
     PYTHONPATH=src python tools/check_bench.py [--tolerance 0.25]
         [--sections breakdown ablation quant_quality dispatch sharded
-         serving obs openloop] [--list]
+         serving preempt obs openloop longctx] [--list]
 
 Exit status 0 = no regressions; 1 = regression or missing/failed re-run.
 Sections without a committed baseline are skipped with a warning
@@ -50,6 +50,7 @@ COMMANDS = {
     "preempt": [sys.executable, "benchmarks/preempt_latency.py", "--smoke"],
     "obs": [sys.executable, "benchmarks/obs_overhead.py", "--smoke"],
     "openloop": [sys.executable, "benchmarks/openloop_load.py", "--smoke"],
+    "longctx": [sys.executable, "benchmarks/longctx_selection.py", "--smoke"],
 }
 
 # (path-into-metrics, direction); direction: "lower" | "higher" | "true"
@@ -160,6 +161,25 @@ GATES = {
             (("nonsync_bytes_per_step",), "lower"),
             (("slo_attainment_low_load",), "higher"),
             (("load_points",), "higher"),
+        ],
+    },
+    "longctx": {
+        "cmd": "longctx",
+        "metrics": [
+            # centroid-then-token selection: serving with correction on must
+            # stay bit-identical to freekv across overlap x quant x tp; the
+            # 256K selection-scan byte reduction must hold >= 4x; planted
+            # needles must be retrieved within 1% of the exact scan; the
+            # 1M extrapolation ratio and the overlap hidden fraction are
+            # counts-based (machine-independent). us_* are recorded, never
+            # gated (analytic here, but the convention is wall-clock-free).
+            (("bit_identical",), "true"),
+            (("reduction_ge_4x",), "true"),
+            (("needle_within_1pct",), "true"),
+            (("reduction_256k",), "higher"),
+            (("needle_acc_centroid_256k",), "higher"),
+            (("extrapolated_1m", "scan_reduction"), "higher"),
+            (("hidden_fraction",), "higher"),
         ],
     },
     "sharded": {
