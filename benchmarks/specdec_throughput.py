@@ -1,0 +1,230 @@
+"""Speculative decoding fused with speculative retrieval: bit-identity +
+throughput sweep (own process: it forces XLA host devices for the tp=2
+cells before jax initializes).
+
+Two measurements:
+
+* **bit_identical** — for every cell of draft_len={0, 2, 4} x
+  recall_overlap={on, off} x kv_quant={none, int8} x tp={1, 2}, the greedy
+  token streams of the speculative host-sync-free loop (``sync_interval=8``,
+  on-device sampling + drafting, donated state) must match the
+  non-speculative synchronous per-step reference (``draft_len=0,
+  sample_on_device=False``) exactly. The drafter only proposes; the batched
+  verify pass accepts the longest prefix that greedy decoding would have
+  produced anyway, so ANY mismatch is a bug. Any False fails CI via
+  ``tools/check_bench.py``.
+
+* **throughput** — a decode-dominated run measures tokens/sec at
+  draft_len=0 vs draft_len>0 under a high-accept workload: the baseline
+  run's own greedy continuation is replayed as each request's
+  ``draft_hint`` (prompt-lookup style — hints steer only the proposer,
+  verification guarantees the outputs stay bit-identical, which the run
+  re-asserts). Reported per draft_len: accept_rate, tokens per target
+  step, wall and decode-only speedups. The gated ``speedup_ge_1p5x`` bool
+  uses the decode-attributed ratio (prefill does identical work in both
+  runs and is excluded); raw tokens/sec are recorded but never gated
+  (CI runners differ).
+
+    PYTHONPATH=src python benchmarks/specdec_throughput.py [--smoke]
+
+Writes the ``BENCH_specdec.json`` trajectory file (schema:
+_common.bench_json).
+"""
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=2")
+
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.configs.base import FreeKVConfig  # noqa: E402
+from repro.models.model import init_params  # noqa: E402
+from repro.serving.engine import Request, ServeEngine  # noqa: E402
+from repro.serving.sampling import SamplerConfig  # noqa: E402
+
+SMOKE = dict(arch="smollm-360m-smoke", context=48, requests=4, slots=2,
+             short_new=5, long_new=9, page_size=8, budget=48,
+             timing_new=96, timing_draft_lens=(4,))
+FULL = dict(arch="smollm-360m-smoke", context=128, requests=8, slots=4,
+            short_new=6, long_new=14, page_size=8, budget=64,
+            timing_new=192, timing_draft_lens=(2, 4, 6))
+
+IDENT_DRAFT_LENS = (0, 2, 4)
+
+
+def equal_len_requests(cfg, context, n, short_new, long_new, seed=0):
+    """Equal prompt LENGTHS (contents differ): prompt padding never enters
+    the picture, so every scheduler/draft_len cell is comparable
+    bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab_size, context
+                                        ).astype(np.int32),
+                    max_new_tokens=short_new if i % 2 == 0 else long_new)
+            for i in range(n)]
+
+
+def _engine(cfg, params, fkv, max_len, slots, tp=1):
+    return ServeEngine(cfg, fkv, params, max_len=max_len, batch_size=slots,
+                       sampler=SamplerConfig(temperature=0.0),
+                       scheduler="continuous", tp=tp)
+
+
+def identity_sweep(cfg, params, base, max_len, slots, reqs_fn, quiet):
+    ident_all = True
+    configs = {}
+    for overlap in (True, False):
+        for quant in ("none", "int8"):
+            for tp in (1, 2):
+                fkv = dataclasses.replace(base, recall_overlap=overlap,
+                                          kv_quant=quant)
+                ref_eng = _engine(cfg, params, dataclasses.replace(
+                    fkv, draft_len=0, sample_on_device=False),
+                    max_len, slots, tp)
+                ref = [c.tokens for c in ref_eng.generate(reqs_fn())]
+                ident = True
+                for dl in IDENT_DRAFT_LENS:
+                    eng = _engine(cfg, params, dataclasses.replace(
+                        fkv, draft_len=dl, sample_on_device=True,
+                        sync_interval=8), max_len, slots, tp)
+                    toks = [c.tokens for c in eng.generate(reqs_fn())]
+                    ident &= toks == ref
+                ident_all &= ident
+                name = (f"dl={'/'.join(map(str, IDENT_DRAFT_LENS))}"
+                        f"/overlap={int(overlap)}/quant={quant}/tp={tp}")
+                configs[name] = {"bit_identical": bool(ident)}
+                if not quiet:
+                    print(f"  {name:44s} bit_identical={ident}")
+    return bool(ident_all), configs
+
+
+def timing_sweep(cfg, params, base, max_len, slots, context, requests,
+                 timing_new, draft_lens, quiet):
+    """Decode-dominated equal-length batch, draft_len=0 vs each draft_len>0
+    with the baseline's own continuation fed back as the draft hint."""
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab_size, context).astype(np.int32)
+               for _ in range(requests)]
+
+    def run(draft_len, hints=None):
+        fkv = dataclasses.replace(base, draft_len=draft_len,
+                                  sample_on_device=True, sync_interval=8)
+        eng = _engine(cfg, params, fkv, max_len, slots)
+        mk = lambda: [Request(  # noqa: E731
+            uid=i, tokens=p, max_new_tokens=timing_new,
+            draft_hint=None if hints is None else hints[i])
+            for i, p in enumerate(prompts)]
+        eng.generate(mk())                  # warmup: compile all shapes
+        t0 = time.perf_counter()
+        outs = eng.generate(mk())
+        wall_s = time.perf_counter() - t0
+        decode_s = sum(o.decode_s for o in outs)
+        toks = sum(len(o.tokens) for o in outs)
+        em = eng.last_metrics
+        return (sorted(outs, key=lambda o: o.uid), toks, wall_s, decode_s,
+                em.summary()["specdec"], em.summary()["dispatch"])
+
+    outs0, toks0, wall0, dec0, _, _ = run(0)
+    base_wall = toks0 / wall0
+    base_dec = toks0 / dec0
+    if not quiet:
+        print(f"  draft_len=0: {base_wall:.0f} tok/s wall, "
+              f"{base_dec:.0f} tok/s decode")
+    hints = [np.concatenate([prompts[o.uid][-1:],
+                             np.asarray(o.tokens, np.int32)])
+             for o in outs0]
+    out = {"baseline": {"tokens": toks0, "tok_per_s_wall": base_wall,
+                        "tok_per_s_decode": base_dec}}
+    best = 0.0
+    ident_all = True
+    for dl in draft_lens:
+        outs, toks, wall, dec, spec, disp = run(dl, hints)
+        ident = [o.tokens for o in outs] == [o.tokens for o in outs0]
+        ident_all &= ident
+        cell = {
+            "bit_identical": bool(ident),
+            "accept_rate": spec["accept_rate"],
+            "tokens_per_step": spec["tokens_per_step"],
+            "tok_per_s_wall": toks / wall,
+            "tok_per_s_decode": toks / dec,
+            "wall_speedup": (toks / wall) / base_wall,
+            "decode_speedup": (toks / dec) / base_dec,
+            "nonsync_bytes_per_step": disp["nonsync_bytes_per_step"],
+        }
+        best = max(best, cell["decode_speedup"])
+        out[f"dl={dl}"] = cell
+        if not quiet:
+            print(f"  draft_len={dl}: accept {cell['accept_rate']:.3f} | "
+                  f"{cell['tokens_per_step']:.2f} tok/target-step | wall "
+                  f"x{cell['wall_speedup']:.2f} | decode "
+                  f"x{cell['decode_speedup']:.2f} | identical={ident}")
+    out["speedup"] = best
+    out["speedup_ge_1p5x"] = bool(best >= 1.5)
+    out["bit_identical"] = bool(ident_all)
+    return out
+
+
+def run(arch, context, requests, slots, short_new, long_new, page_size,
+        budget, timing_new, timing_draft_lens, quiet=False):
+    cfg = get_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    base = FreeKVConfig(method="freekv", page_size=page_size, budget=budget,
+                        n_sink=page_size, n_window=page_size, tau=0.8)
+    max_len = context + long_new + page_size
+    reqs_fn = lambda: equal_len_requests(cfg, context, requests,  # noqa: E731
+                                         short_new, long_new)
+    ident, configs = identity_sweep(cfg, params, base, max_len, slots,
+                                    reqs_fn, quiet)
+    timing = timing_sweep(cfg, params, base, context + timing_new + page_size,
+                          slots, context, requests, timing_new,
+                          timing_draft_lens, quiet)
+    spec = timing[f"dl={timing_draft_lens[-1]}"]
+    return {
+        "bit_identical": bool(ident and timing["bit_identical"]),
+        "accept_rate": spec["accept_rate"],
+        "tokens_per_step": spec["tokens_per_step"],
+        "speedup": timing["speedup"],
+        "speedup_ge_1p5x": timing["speedup_ge_1p5x"],
+        "configs": configs,
+        "timing": timing,
+    }
+
+
+def main():
+    from _common import bench_json
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run — still writes BENCH_specdec.json")
+    ap.add_argument("--no-json", action="store_true")
+    args = ap.parse_args()
+    config = dict(SMOKE) if args.smoke else dict(FULL)
+    print(f"devices: {jax.devices()}")
+    res = run(**config)
+    status = "PASS" if res["bit_identical"] else "FAIL"
+    print(f"bit_identical across specdec sweep: {res['bit_identical']} "
+          f"[{status}]")
+    print(f"accept {res['accept_rate']:.3f} | "
+          f"{res['tokens_per_step']:.2f} tokens/target-step | decode "
+          f"speedup {res['speedup']:.2f}x "
+          f"(>=1.5x: {res['speedup_ge_1p5x']})")
+    if not args.no_json:
+        bench_json("specdec", config, res)
+    if not res["bit_identical"]:
+        sys.exit(1)
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,17 @@
 """Quickstart: FreeKV serving on CPU with a reduced model.
 
     PYTHONPATH=src python examples/quickstart.py [--kv-quant int8]
+        [--draft-len 4]
 
 ``--kv-quant`` stores the offloaded KV pool at int8 / packed int4 with fused
 dequant-on-recall (src/repro/quant) — the completion prints the recall-bytes
 saving and host-pool compression from ``EngineMetrics.summary()["kv_quant"]``.
+
+``--draft-len N`` turns on speculative decoding: an on-device bigram drafter
+proposes N tokens per step and one batched verify pass commits the longest
+greedy-consistent prefix — outputs are bit-identical to ``--draft-len 0``,
+and the run prints the accept rate + tokens per target step from
+``EngineMetrics.summary()["specdec"]``.
 """
 import argparse
 import os
@@ -31,12 +38,18 @@ def main():
                          "attainment + goodput line from summary()['slo']")
     ap.add_argument("--slo-itl-ms", type=float, default=None,
                     help="mean inter-token-latency SLO (ms)")
+    ap.add_argument("--draft-len", type=int, default=0,
+                    help="speculative decoding: drafted tokens per verify "
+                         "step (0 = off; outputs bit-identical either way)")
+    ap.add_argument("--no-spec-decode", action="store_true",
+                    help="force draft_len=0 regardless of --draft-len")
     args = ap.parse_args()
 
     cfg = get_config("smollm-360m-smoke")          # reduced llama-style model
     params = init_params(cfg, jax.random.PRNGKey(0))
     fkv = FreeKVConfig(method="freekv", page_size=8, budget=64, n_sink=8,
-                       n_window=8, tau=0.8, kv_quant=args.kv_quant)
+                       n_window=8, tau=0.8, kv_quant=args.kv_quant,
+                       draft_len=0 if args.no_spec_decode else args.draft_len)
     engine = ServeEngine(cfg, fkv, params, max_len=256, batch_size=2,
                          slo_ttft_ms=args.slo_ttft_ms,
                          slo_itl_ms=args.slo_itl_ms)
@@ -52,6 +65,11 @@ def main():
               f"decode {out.decode_s/out.steps*1e3:.1f} ms/step, "
               f"correction_rate={out.stats['correction_rate']:.3f}, "
               f"query_similarity={out.stats['mean_similarity']:.3f}")
+    sd = engine.last_metrics.specdec_summary()
+    if sd["draft_len"] > 0:
+        print(f"spec-decode (draft_len={sd['draft_len']}): accept rate "
+              f"{sd['accept_rate']:.3f}, {sd['tokens_per_step']:.2f} tokens "
+              f"per target step")
     kq = engine.last_metrics.summary()["kv_quant"]
     if kq["mode"] != "none":
         print(f"kv_quant={kq['mode']}: block {kq['dense_block_bytes']} -> "

@@ -319,6 +319,20 @@ class FreeKVConfig:
     # (per-head full top-k) selection — unlike the page-sharded approximate
     # ``sharded_retrieval`` path, with which it is mutually exclusive.
     tp_serving: bool = False
+    # Speculative decoding fused with speculative retrieval (core/drafter +
+    # models.serve_step_verify): a device-resident per-slot bigram drafter
+    # proposes up to ``draft_len`` tokens per window iteration, one batched
+    # target pass scores the (B, 1+draft_len) drafted block — retrieval and
+    # attention run per drafted position through the exact sequential decode
+    # step, so accept-longest-prefix under the per-request PRNG streams makes
+    # greedy outputs BIT-IDENTICAL to draft_len=0 — and the rejected suffix's
+    # KV lanes are rolled back in place (one staged recall restores the
+    # selection buffers, which doubles as the draft-ahead prefetch for the
+    # next block). 0 = off: the decode path traces the exact same graph as
+    # before. Requires an attention-only stack and method in
+    # {freekv, arkvale, infinigen}; mutually exclusive with
+    # ``sharded_retrieval`` (see models.supports_spec_decode).
+    draft_len: int = 0
 
     def __post_init__(self):
         if self.retriever:

@@ -1,0 +1,82 @@
+"""Device-resident self-drafting proposer for speculative decoding.
+
+FreeKV hides retrieval latency by speculating on *which pages* the next step
+needs; this module speculates on *which tokens* the model will emit, so one
+batched verify pass (``models.serve_step_verify``) can commit several tokens
+per target-model step. The drafter is training-free and model-free: a
+per-slot bigram successor table over the request's own token stream (prompt
++ committed continuation), the n-gram/self-drafting family of proposers.
+
+The table is ONE decode-state lane:
+
+  ``draft_tab`` (B, vocab) int32 — ``draft_tab[b, t]`` is the most recent
+  successor of token ``t`` observed in slot ``b``'s stream, or -1.
+
+It lives as a top-level key of the serving decode state (sibling of
+``pos``), so slot splice/extract, preemption swap, donation, and the TP
+``decode_state_spec`` fallthrough (batch-only → replicated) all apply to it
+with zero special cases. Seeding from the prompt happens host-side at
+admission (``seed_from_prompt``); proposal and the on-commit update run
+inside the jitted decode window (pure gathers/scatters, no host sync).
+
+Exactness does not depend on draft quality in any way: proposals are
+verified by the target model with accept-longest-prefix, so a wrong (or
+-1 → fallback 0) proposal merely costs its slice of the drafted block.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_draft_tab(batch: int, vocab: int):
+    """Empty successor table: no bigram observed yet."""
+    return jnp.full((batch, vocab), -1, jnp.int32)
+
+
+def seed_from_prompt(vocab: int, tokens) -> np.ndarray:
+    """Bigram table (1, vocab) for one request's prompt, host-side.
+
+    Later occurrences win (``tab[t]`` = most recent successor of ``t``),
+    matching the in-jit ``update`` ordering over the generated stream."""
+    tab = np.full((1, vocab), -1, np.int32)
+    toks = np.asarray(tokens, np.int64)
+    if toks.size >= 2:
+        src = np.clip(toks[:-1], 0, vocab - 1)
+        tab[0, src] = np.clip(toks[1:], 0, vocab - 1)
+    return tab
+
+
+def propose(tab, cur, draft_len: int):
+    """Chain ``draft_len`` successor lookups from ``cur`` (B,) int32.
+
+    Returns (B, draft_len) int32 proposals, clamped to valid token ids — a
+    miss (no successor) proposes token 0, which the verify pass simply
+    rejects. The chain is draft-time-only state; nothing here is carried."""
+    B = cur.shape[0]
+    bidx = jnp.arange(B)
+    out = []
+    t = cur
+    for _ in range(draft_len):
+        nxt = tab[bidx, jnp.clip(t, 0, tab.shape[1] - 1)]
+        t = jnp.where(nxt >= 0, nxt, 0).astype(jnp.int32)
+        out.append(t)
+    return jnp.stack(out, axis=1) if out else jnp.zeros((B, 0), jnp.int32)
+
+
+def update(tab, toks, emit):
+    """Fold one verify block's committed bigrams into the table.
+
+    ``toks`` (B, S) — the token stream rows fed+emitted this block, where
+    ``toks[:, j] -> toks[:, j+1]`` is a bigram iff ``emit[:, j+1]`` (row j+1
+    was actually emitted). Masked rows scatter into their existing value
+    (read-modify-write no-op) so the update stays shape-static and the
+    sequential-scatter order matches the one-token-per-step path exactly."""
+    B, S = toks.shape
+    bidx = jnp.arange(B)
+    for j in range(S - 1):
+        src = jnp.clip(toks[:, j], 0, tab.shape[1] - 1)
+        new = jnp.clip(toks[:, j + 1], 0, tab.shape[1] - 1)
+        old = tab[bidx, src]
+        tab = tab.at[bidx, src].set(jnp.where(emit[:, j + 1], new, old))
+    return tab

@@ -209,6 +209,14 @@ class RecallFlightTracker:
         """Slot turnover: the staged buffer is abandoned mid-flight."""
         self.dropped_pages += self._in_flight.pop(slot, 0.0)
 
+    def drop(self, pages: float):
+        """Pages streamed for work that was discarded without ever touching
+        the slot's carried buffer — a speculative-decoding verify row whose
+        draft was rejected staged (and topped up) for a continuation that
+        never commits; the rollback recall re-stages from the last committed
+        row. Accounted straight into the dropped total."""
+        self.dropped_pages += max(pages, 0.0)
+
     def suspend(self, slot: int) -> float:
         """Preemption swap-out: the slot's staged buffer lives in the
         ``sel_k/sel_v`` leaves and round-trips through host memory with the

@@ -118,6 +118,50 @@ def _cat_regions(fkv, state, sel_k, sel_v, sel_idx, p):
     return k_cat, v_cat, pos
 
 
+def ring_snapshot(state, n_rows: int):
+    """Save the ``n_rows`` window-ring slots a drafted block will write.
+
+    A verify pass (``models.serve_step_verify``) appends every drafted row
+    into the ring before knowing which rows commit; rows ``>= m`` must then
+    be undone so the ring is bitwise what ``m`` sequential appends leave.
+    Appends at positions ``length + j`` land in slots ``(length + j) %
+    n_win`` — distinct while ``n_rows <= n_win`` — so saving those slots'
+    (k, v, pos) beforehand is a complete undo log. Works for any state with
+    the ``win_k/win_v/win_pos`` ring contract (FreeKV and streaming)."""
+    n_win = state["win_k"].shape[1]
+    slots = (state["length"][:, None] + jnp.arange(n_rows)[None]) % n_win
+    k = jnp.take_along_axis(state["win_k"], slots[:, :, None, None], axis=1)
+    v = jnp.take_along_axis(state["win_v"], slots[:, :, None, None], axis=1)
+    pos = jnp.take_along_axis(state["win_pos"], slots, axis=1)
+    return slots, k, v, pos
+
+
+def ring_restore(state, snap, keep):
+    """Undo the ring writes of rejected drafted rows.
+
+    ``snap`` is ``ring_snapshot`` taken before the block; ``keep`` (B,) is
+    the per-slot committed row count m. Slots written by rows < m keep the
+    new content (identical to sequential appends); slots written by rows
+    >= m revert to the snapshot. Pool/summary writes by rejected rows are
+    deliberately NOT undone: a stale page is never selectable before the
+    genuine append rewrites it (selection admits pages < length//p only,
+    and the crossing append rewrites first)."""
+    slots, k, v, pos = snap
+    B, S = slots.shape
+    rej = jnp.arange(S)[None, :] >= keep[:, None]                  # (B, S)
+    bidx = jnp.arange(B)[:, None]
+    cur_k = jnp.take_along_axis(state["win_k"], slots[:, :, None, None], 1)
+    cur_v = jnp.take_along_axis(state["win_v"], slots[:, :, None, None], 1)
+    cur_p = jnp.take_along_axis(state["win_pos"], slots, axis=1)
+    r4 = rej[:, :, None, None]
+    return dict(
+        state,
+        win_k=state["win_k"].at[bidx, slots].set(jnp.where(r4, k, cur_k)),
+        win_v=state["win_v"].at[bidx, slots].set(jnp.where(r4, v, cur_v)),
+        win_pos=state["win_pos"].at[bidx, slots].set(
+            jnp.where(rej, pos, cur_p)))
+
+
 class FreeKVRetriever:
     """FreeKV (and, by flags, ArkVale / InfiniGen-style baselines)."""
 
@@ -365,6 +409,33 @@ class FreeKVRetriever:
             self._n_sel(state))
         return new_idx, {}
 
+    # -- speculative-decoding rollback (models.serve_step_verify) -------
+    def draft_probe(self, state):
+        """Per-row rewind probe the verify scan stacks: the post-step lanes
+        (beyond ``length`` and the ring, which have their own undo paths)
+        needed to restore an arbitrary committed row's state."""
+        return (state["qprev"], state["sel_idx"])
+
+    def draft_rewind(self, state, keep_len, probe):
+        """Roll a drafted block back to ``keep_len`` committed tokens.
+
+        ``probe`` is this layer's ``draft_probe`` gathered at the last
+        committed row. The selection buffers are rebuilt with ONE staged
+        recall of that row's ``sel_idx`` — bitwise what the sequential path
+        stored, because pool pages are write-once and both the overlap and
+        blocking paths store exactly ``recall(pool, sel_idx)`` content
+        (core/recall_pipeline: ``staged == fresh`` holds bit-exactly). That
+        recall is simultaneously the draft-ahead prefetch: the next drafted
+        block's first verify row reuses it as its resident buffer. Stale
+        pool/summary pages written by rejected rows stay (never selectable
+        before the genuine append rewrites them); the ring is restored
+        separately via ``ring_restore``."""
+        qprev, sel_idx = probe
+        nk, nv = self.executor.recall(self._pool_view(state), sel_idx)
+        return dict(state, length=keep_len, qprev=qprev, sel_idx=sel_idx,
+                    sel_k=nk.astype(state["sel_k"].dtype),
+                    sel_v=nv.astype(state["sel_v"].dtype))
+
 
 class CentroidRetriever(FreeKVRetriever):
     """Centroid-then-token selection (CTkvr-style two-level index over the
@@ -529,6 +600,15 @@ class StreamingRetriever:
                 "async_pages": jnp.zeros((B,), jnp.int32),
                 "similarity": jnp.zeros((B, kv)), "granularity": "page"}
         return o, st, info
+
+    # -- speculative-decoding rollback (models.serve_step_verify) -------
+    def draft_probe(self, state):
+        """Sink + ring only: nothing beyond length/ring needs restoring."""
+        return ()
+
+    def draft_rewind(self, state, keep_len, probe):
+        del probe
+        return dict(state, length=keep_len)
 
 
 class FullRetriever:

@@ -201,6 +201,17 @@ class TPGroupShardedRetriever:
                                "token_wise_recall", False) else "page")
         return o, st2, info
 
+    # -- speculative-decoding rollback (models.serve_step_verify) -------
+    # Pure data movement (gathers + elementwise dequant, no float
+    # reductions), so it runs OUTSIDE the shard_map on the sharded state:
+    # the partitioner keeps the kv-head-aligned gathers shard-local and the
+    # restored values are bitwise the unsharded ones.
+    def draft_probe(self, state):
+        return self._global.draft_probe(state)
+
+    def draft_rewind(self, state, keep_len, probe):
+        return self._global.draft_rewind(state, keep_len, probe)
+
 
 def _partial_attend(cfg, q, k_cat, v_cat, pos, cur_pos):
     """Returns LSE-mergeable partials: num (B,kv,G,d), den (B,kv,G), m."""

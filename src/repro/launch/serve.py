@@ -73,6 +73,16 @@ def main():
     ap.add_argument("--sync-interval", type=int, default=8,
                     help="decode steps dispatched per host synchronization "
                          "(host-sync-free loop; 1 = sync every step)")
+    ap.add_argument("--draft-len", type=int, default=0,
+                    help="speculative decoding: tokens the on-device bigram "
+                         "drafter proposes per verify step (0 = off). One "
+                         "batched target pass verifies the drafted block and "
+                         "commits the longest greedy-consistent prefix — "
+                         "outputs stay bit-identical, steps get wider. "
+                         "Requires the continuous scheduler + on-device "
+                         "sampling; the engine falls back to 0 otherwise.")
+    ap.add_argument("--no-spec-decode", action="store_true",
+                    help="force draft_len=0 regardless of --draft-len")
     ap.add_argument("--host-sampling", action="store_true",
                     help="disable on-device sampling (synchronous reference "
                          "path: one host round trip per decode step; greedy "
@@ -135,7 +145,8 @@ def main():
                        sample_on_device=not args.host_sampling,
                        prefill_chunk_tokens=args.prefill_chunk,
                        preempt=args.preempt,
-                       kernel_interpret=args.kernel_interpret)
+                       kernel_interpret=args.kernel_interpret,
+                       draft_len=0 if args.no_spec_decode else args.draft_len)
     if args.no_obs:
         obs = Observability.off()
     else:
@@ -192,6 +203,11 @@ def main():
 def _finish_run(args, em, obs):
     """End-of-run reporting shared by batch mode and --serve-http."""
     print(json.dumps(em.summary(), indent=2, default=str))
+    sd = em.specdec_summary()
+    if sd["draft_len"] > 0:
+        print(f"spec-decode (draft_len={sd['draft_len']}): accept rate "
+              f"{sd['accept_rate']:.3f} | {sd['tokens_per_step']:.2f} tokens "
+              f"per target step over {sd['verify_steps']} verify steps")
     slo = em.slo_summary()
     if slo["tagged"]:
         print(f"SLO (ttft<={slo['ttft_ms']}ms, itl<={slo['itl_ms']}ms): "

@@ -468,8 +468,12 @@ def init_decode_state(cfg: ArchConfig, fkv: FreeKVConfig, batch_size: int,
         one = _init_layer_state(cfg, fkv, lk, r, batch_size, max_len, dtype, F)
         pat.append(jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (cfg.n_periods,) + a.shape), one))
-    return {"prelude": pre, "pattern": tuple(pat),
-            "pos": jnp.zeros((batch_size,), jnp.int32)}
+    out = {"prelude": pre, "pattern": tuple(pat),
+           "pos": jnp.zeros((batch_size,), jnp.int32)}
+    if fkv.draft_len > 0:
+        from repro.core import drafter
+        out["draft_tab"] = drafter.init_draft_tab(batch_size, cfg.vocab_size)
+    return out
 
 
 def _prefill_layer_state(cfg, fkv, lk, retr, extras, max_len, dtype, enc=None):
@@ -749,7 +753,10 @@ def serve_step(cfg: ArchConfig, fkv: FreeKVConfig, params, state, tokens,
         (params["pattern"], jnp.arange(cfg.n_periods)))
     x = L.apply_norm(cfg, params["final_norm"], x)
     logits = L.lm_logits(cfg, params["embed"], x[:, -1])
-    new_state = {"prelude": tuple(new_pre), "pattern": new_pat, "pos": pos + 1}
+    # dict(state, ...) so extra top-level lanes (e.g. the spec-decode
+    # draft_tab) ride through the non-drafted path untouched.
+    new_state = dict(state, prelude=tuple(new_pre), pattern=new_pat,
+                     pos=pos + 1)
     if collect_stats:
         return logits, new_state, stats_acc
     return logits, new_state
@@ -840,6 +847,250 @@ def decode_window(cfg: ArchConfig, fkv: FreeKVConfig, params, state, loop,
         j, st, lp, toks, valid, stats = carry
         st, lp, tok, ok, s = serve_step_sampled(cfg, fkv, params, st, lp,
                                                 sampler, mesh=mesh)
+        toks = jax.lax.dynamic_update_index_in_dim(toks, tok, j, 0)
+        valid = jax.lax.dynamic_update_index_in_dim(valid, ok, j, 0)
+        stats = {k: jax.lax.dynamic_update_index_in_dim(stats[k], s[k], j, 0)
+                 for k in stats}
+        return j + 1, st, lp, toks, valid, stats
+
+    n, state, loop, toks, valid, stats = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), state, loop, toks0, valid0, stats0))
+    return state, loop, toks, valid, stats, n
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: drafted block verify + in-place rollback
+# ---------------------------------------------------------------------------
+def supports_spec_decode(cfg: ArchConfig, fkv: FreeKVConfig) -> bool:
+    """Speculative decoding needs every drafted row to run the exact
+    sequential retrieval step (attention-only stacks, pool-backed retrievers
+    with a rewindable selection buffer) and a deterministic batched backbone
+    (dense FFN; MoE routing over a drafted block is not row-wise guaranteed).
+    The page-sharded fused step keeps its own selection schedule and is
+    excluded; KV-head-group ``tp_serving`` composes (the TP wrapper forwards
+    the rollback hooks)."""
+    return (fkv.draft_len > 0
+            and fkv.method in ("freekv", "arkvale", "infinigen")
+            and not fkv.sharded_retrieval
+            and supports_kv_extend(cfg)
+            and all(f in (DENSE, NONE) for _, f in cfg.layers))
+
+
+def _apply_layer_verify(cfg, fkv, lk, retr, lp, x, pos, st, mesh,
+                        q_proxy_rows):
+    """One layer over a drafted block x (B, S, d): the backbone (norms, QKV
+    projection, out-projection, FFN) runs batched over the S rows — bitwise
+    row-identical to S single-row passes — while retrieval + attention run
+    per row through the exact sequential ``retr.decode``, appending all S
+    rows. Returns (x, st, q_rows, stats_rows (S-stacked), undo) where undo =
+    (ring snapshot, per-row rewind probes) feeds the post-acceptance
+    rollback."""
+    from repro.core import retrieval as retrieval_mod
+    mixer, _ = lk
+    lp = _gather_for_compute(cfg, mesh, lp)
+    h = L.apply_norm(cfg, lp["norm1"], x)
+    B, S = x.shape[:2]
+    positions = pos[:, None] + jnp.arange(S)[None, :]
+    q, k, v = attn.qkv_proj(cfg, lp["mixer"], h, positions)      # (B,S,H,d)
+    snap = retrieval_mod.ring_snapshot(st, S)
+
+    def step(carry_st, inp):
+        qj, kj, vj, qpj = inp
+        o, st2, info = retr.decode(carry_st, qj, kj, vj, q_proxy=qpj)
+        s = _info_stats(info if mixer == ATTN else None, B)
+        return st2, (o, retr.draft_probe(st2), s)
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), q_proxy_rows.transpose(1, 0, 2, 3))
+    st, (o_rows, probe_rows, stats_rows) = jax.lax.scan(step, st, xs)
+    out = attn.out_proj(cfg, lp["mixer"], o_rows.transpose(1, 0, 2, 3))
+    x = _residual(cfg, lp, x, out, "1")
+    x, _ = _apply_ffn(cfg, lk, lp, x, mesh)
+    return x, st, q, stats_rows, (snap, probe_rows)
+
+
+def _rewind_layer(retr, st, keep_len, undo, last_row, keep):
+    """Roll one layer's state back to the accepted prefix: restore the
+    selection lanes from the last committed row's probe (one staged recall,
+    doubling as the next block's prefetch) and undo rejected ring writes."""
+    from repro.core import retrieval as retrieval_mod
+    snap, probe_rows = undo
+    B = keep.shape[0]
+    probe = jax.tree.map(lambda a: a[last_row, jnp.arange(B)], probe_rows)
+    st = retr.draft_rewind(st, keep_len, probe)
+    return retrieval_mod.ring_restore(st, snap, keep)
+
+
+def serve_step_verify(cfg: ArchConfig, fkv: FreeKVConfig, params, state,
+                      tokens, mesh=None):
+    """One target pass over a drafted block: tokens (B, S) with row 0 the
+    committed current token and rows 1..S-1 the drafted continuation.
+
+    Returns (logits (B, S, vocab), state with all S rows appended,
+    stats_rows {key: (S, B)}, undo info for ``_rewind_state``). Every row's
+    logits are bitwise what S sequential ``serve_step`` calls produce, so
+    accept-longest-prefix acceptance preserves exact sample streams."""
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    B, S = tokens.shape
+    pos = state["pos"]
+    pre_r, pat_r = _retrievers(cfg, fkv, mesh)
+    cmesh = _compute_mesh(fkv, mesh)
+    q_proxy = jnp.zeros((B, S, cfg.n_heads, cfg.d_head), x.dtype)
+
+    stats_rows = {k: jnp.zeros((S, B), jnp.float32) for k in DECODE_STAT_KEYS}
+    new_pre, pre_undo = [], []
+    for lp, lk, r, st in zip(params["prelude"], cfg.prelude, pre_r,
+                             state["prelude"]):
+        x, st, q_proxy, rows, undo = _apply_layer_verify(
+            cfg, fkv, lk, r, lp, x, pos, st, cmesh, q_proxy)
+        new_pre.append(st)
+        pre_undo.append(undo)
+        stats_rows = {k: stats_rows[k] + rows[k] for k in stats_rows}
+
+    def scan_body(carry, xs):
+        x, q_proxy, acc, states = carry
+        lps, i = xs
+        undos = []
+        for pos_i, lk in enumerate(cfg.pattern):
+            st_i = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                states[pos_i])
+            x, st, q_proxy, rows, undo = _apply_layer_verify(
+                cfg, fkv, lk, pat_r[pos_i], lps[pos_i], x, pos, st_i,
+                cmesh, q_proxy)
+            states = states[:pos_i] + (jax.tree.map(
+                lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                    a, n.astype(a.dtype), i, 0), states[pos_i], st),) \
+                + states[pos_i + 1:]
+            undos.append(undo)
+            acc = {k: acc[k] + rows[k] for k in acc}
+        return (x, q_proxy, acc, states), tuple(undos)
+
+    (x, _, stats_rows, new_pat), pat_undos = jax.lax.scan(
+        scan_body, (x, q_proxy, stats_rows, state["pattern"]),
+        (params["pattern"], jnp.arange(cfg.n_periods)))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.lm_logits(cfg, params["embed"], x)
+    new_state = dict(state, prelude=tuple(new_pre), pattern=new_pat)
+    return logits, new_state, stats_rows, (pre_undo, pat_undos, pre_r, pat_r)
+
+
+def _rewind_state(cfg, state, undo_info, m, last_row):
+    """Roll every layer back to the m committed rows (per slot) and advance
+    ``pos`` by m."""
+    pre_undo, pat_undos, pre_r, pat_r = undo_info
+    keep_len = state["pos"] + m
+
+    new_pre = [
+        _rewind_layer(r, st, keep_len, undo, last_row, m)
+        for st, r, undo in zip(state["prelude"], pre_r, pre_undo)]
+
+    def rewind_body(states, xs):
+        undos_i, i = xs
+        for pos_i in range(len(cfg.pattern)):
+            st_i = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                states[pos_i])
+            st2 = _rewind_layer(pat_r[pos_i], st_i, keep_len, undos_i[pos_i],
+                                last_row, m)
+            states = states[:pos_i] + (jax.tree.map(
+                lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                    a, n.astype(a.dtype), i, 0), states[pos_i], st2),) \
+                + states[pos_i + 1:]
+        return states, None
+
+    new_pat, _ = jax.lax.scan(rewind_body, state["pattern"],
+                              (pat_undos, jnp.arange(cfg.n_periods)))
+    return dict(state, prelude=tuple(new_pre), pattern=new_pat,
+                pos=state["pos"] + m)
+
+
+def serve_step_spec(cfg: ArchConfig, fkv: FreeKVConfig, params, state, loop,
+                    sampler, mesh=None):
+    """One fused speculative decode iteration: draft -> batched verify ->
+    accept-longest-prefix -> in-place rollback -> drafter update.
+
+    The drafted block is [cur, d_1..d_L] (S = 1 + draft_len rows). Row j is
+    scored with the same per-request key ``fold_in(request_key, count + j)``
+    the sequential path would use, and row j >= 1 is emitted iff every
+    earlier row matched its draft, produced no eos, and the request limit was
+    not reached — exactly the tokens m sequential steps would emit, so
+    greedy AND sampled outputs are bit-identical to ``draft_len=0``.
+
+    Returns (state, loop, toks (S, B), emit (S, B), stats {key: (S, B)}):
+    row-major blocks the spec decode window stacks into its (k, S, B)
+    machinery. Everything stays on device (no host syncs)."""
+    from repro.core import drafter
+    from repro.serving import sampling
+    B = loop["cur"].shape[0]
+    S = fkv.draft_len + 1
+    cur = loop["cur"]
+    drafted = drafter.propose(state["draft_tab"], cur, fkv.draft_len)
+    toks = jnp.concatenate([cur[:, None], drafted], axis=1)       # (B, S)
+
+    logits, state, stats_rows, undo_info = serve_step_verify(
+        cfg, fkv, params, state, toks, mesh=mesh)
+
+    counts_j = loop["count"][None, :] + jnp.arange(S)[:, None]    # (S, B)
+
+    def samp(lg_j, cnt_j):
+        keys = sampling.step_keys(loop["key"], cnt_j)
+        return sampling.sample_step(lg_j, sampler, keys)
+
+    e = jax.vmap(samp)(logits.transpose(1, 0, 2), counts_j)       # (S, B)
+
+    live0 = ~loop["fin"]
+    emits = [live0]
+    for j in range(1, S):
+        prev_e = e[j - 1]
+        cont = ((drafted[:, j - 1] == prev_e) & (prev_e != loop["eos"])
+                & (loop["count"] + j < loop["limit"]))
+        emits.append(emits[-1] & cont)
+    emit = jnp.stack(emits)                                       # (S, B)
+    m = jnp.sum(emit.astype(jnp.int32), axis=0)                   # (B,)
+    last_row = jnp.clip(m - 1, 0, S - 1)
+
+    state = _rewind_state(cfg, state, undo_info, m, last_row)
+
+    e_last = e[last_row, jnp.arange(B)]
+    valid_any = m > 0
+    count = loop["count"] + m
+    fin = loop["fin"] | (valid_any & ((e_last == loop["eos"])
+                                      | (count >= loop["limit"])))
+    loop = dict(loop, cur=jnp.where(valid_any, e_last, cur), count=count,
+                fin=fin)
+
+    stream = jnp.concatenate([cur[:, None], e.T], axis=1)         # (B, S+1)
+    emit_ext = jnp.concatenate([live0[:, None], emit.T], axis=1)
+    state = dict(state, draft_tab=drafter.update(state["draft_tab"],
+                                                 stream, emit_ext))
+    return state, loop, e, emit, stats_rows
+
+
+def decode_window_spec(cfg: ArchConfig, fkv: FreeKVConfig, params, state,
+                       loop, sampler, k_max: int, mesh=None):
+    """Speculative variant of ``decode_window``: up to ``k_max`` drafted
+    verify iterations with zero host round trips, (k_max, S, B) token /
+    emit / stat blocks pulled once per sync. Same early-exit and donation
+    contract as ``decode_window``; up to S tokens commit per iteration."""
+    B = loop["cur"].shape[0]
+    S = fkv.draft_len + 1
+    start_live = ~loop["fin"]
+    toks0 = jnp.zeros((k_max, S, B), jnp.int32)
+    valid0 = jnp.zeros((k_max, S, B), jnp.bool_)
+    stats0 = {k: jnp.zeros((k_max, S, B), jnp.float32)
+              for k in DECODE_STAT_KEYS}
+
+    def cond(carry):
+        j, _, lp, _, _, _ = carry
+        live = jnp.any(~lp["fin"])
+        turned = lp["stop_turnover"] & jnp.any(lp["fin"] & start_live)
+        return (j < k_max) & live & ~turned
+
+    def body(carry):
+        j, st, lp, toks, valid, stats = carry
+        st, lp, tok, ok, s = serve_step_spec(cfg, fkv, params, st, lp,
+                                             sampler, mesh=mesh)
         toks = jax.lax.dynamic_update_index_in_dim(toks, tok, j, 0)
         valid = jax.lax.dynamic_update_index_in_dim(valid, ok, j, 0)
         stats = {k: jax.lax.dynamic_update_index_in_dim(stats[k], s[k], j, 0)

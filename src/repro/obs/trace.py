@@ -47,6 +47,10 @@ SPAN_REQUEST_DECODE = "request/decode"
 SPAN_REQUEST_DONE = "request/done"
 SPAN_DECODE_WINDOW = "engine/decode_window"
 SPAN_DECODE_STEP = "engine/decode_step"
+# one drafted-block verify iteration (speculative decoding): args carry the
+# live-slot count plus proposed/accepted/committed token counts, so the
+# accepted-tokens-per-target-step distribution is readable off the trace
+SPAN_SPEC_VERIFY = "engine/spec_verify"
 SPAN_PREFILL_CHUNK = "engine/prefill_chunk"
 SPAN_SCHED_PREEMPT = "sched/preempt"
 SPAN_SCHED_RESUME = "sched/resume"

@@ -50,9 +50,10 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, FreeKVConfig
 from repro.core.recall_pipeline import RecallFlightTracker
-from repro.models.model import (DECODE_STAT_KEYS, decode_window, prefill,
-                                prefill_extend, serve_step,
-                                supports_kv_extend)
+from repro.models.model import (DECODE_STAT_KEYS, decode_window,
+                                decode_window_spec, prefill, prefill_extend,
+                                serve_step, supports_kv_extend,
+                                supports_spec_decode)
 from repro.obs import Observability
 from repro.serving.kv_slots import SlotPool
 from repro.serving.metrics import EngineMetrics, RequestMetrics
@@ -79,6 +80,12 @@ class Request:
     # goodput); tags never influence scheduling decisions.
     slo_ttft_ms: Optional[float] = None
     slo_itl_ms: Optional[float] = None
+    # optional reference stream for the speculative drafter (prompt-lookup
+    # style: a retrieved document, an earlier draft of the answer, ...).
+    # Its bigrams overlay the prompt-seeded table at admission. Hints steer
+    # ONLY the proposer — verification guarantees outputs are bit-identical
+    # with any hint, a wrong hint just lowers the accept rate.
+    draft_hint: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -176,7 +183,9 @@ class PrefillJob:
             if eng.prefix_cache is not None:
                 eng.prefix_cache.insert(self.seq, self._flat)
             self._flat = None
-            self.result = (logits, state, self.hit, len(self.seq))
+            self.result = (logits, eng._attach_draft_tab(
+                state, self.seq, getattr(self.req, "draft_hint", None)),
+                self.hit, len(self.seq))
         return n
 
 
@@ -210,6 +219,17 @@ class ServeEngine:
             from repro.launch.mesh import make_tp_mesh
             mesh = make_tp_mesh(tp)
             fkv = dataclasses.replace(fkv, tp_serving=True)
+        # speculative decoding (models.serve_step_spec) rides the continuous
+        # scheduler's host-sync-free window; configs it cannot serve exactly
+        # (static scheduler, synchronous sampling, non-attention stacks, the
+        # page-sharded fused step) silently fall back to draft_len=0 — the
+        # fallback is exact by construction, it just commits 1 token/step.
+        if fkv.draft_len > 0 and not (
+                scheduler == "continuous" and fkv.sample_on_device
+                and supports_spec_decode(cfg, fkv)):
+            fkv = dataclasses.replace(fkv, draft_len=0)
+        self.spec_decode = fkv.draft_len > 0
+        self.draft_len = fkv.draft_len
         self.tp = tp
         self.mesh = mesh
         self.cfg, self.fkv, self.params = cfg, fkv, params
@@ -258,11 +278,14 @@ class ServeEngine:
         # zero host round trips and zero state copies inside the window.
         self.sync_interval = max(1, fkv.sync_interval)
         self.sample_on_device = bool(fkv.sample_on_device)
+        # speculative mode swaps in the drafted-window variant: same carry,
+        # same donation, (k, 1 + draft_len, B) token/valid/stat blocks.
+        _win = decode_window_spec if self.spec_decode else decode_window
         self._window = jax.jit(
-            lambda p, s, lp: decode_window(cfg, fkv, p, s, lp,
-                                           sampler=sampler,
-                                           k_max=self.sync_interval,
-                                           mesh=mesh),
+            lambda p, s, lp: _win(cfg, fkv, p, s, lp,
+                                  sampler=sampler,
+                                  k_max=self.sync_interval,
+                                  mesh=mesh),
             donate_argnums=(1, 2))
         self._can_extend = supports_kv_extend(cfg)
         self.prefix_cache = (RadixPrefixCache(prefix_cache_tokens)
@@ -368,6 +391,25 @@ class ServeEngine:
         return self.sample_lanes(logits, keys,
                                  jnp.full((1,), count, jnp.int32))
 
+    def _attach_draft_tab(self, state, seq, hint=None):
+        """Seed the B=1 state's bigram drafter table from the (padded)
+        prompt before it is spliced into a slot. Host-side and cheap — one
+        (1, vocab) scatter per admission; the in-jit drafter then folds the
+        generated stream in as tokens commit. ``hint`` (a request's
+        ``draft_hint``) overlays its bigrams on top of the prompt's."""
+        if not self.spec_decode or state is None:
+            return state
+        from repro.core import drafter
+        tab = drafter.seed_from_prompt(self.cfg.vocab_size,
+                                       np.asarray(seq, np.int64))
+        if hint is not None and len(hint) >= 2:
+            h = drafter.seed_from_prompt(self.cfg.vocab_size,
+                                         np.asarray(hint, np.int64))
+            tab = np.where(h >= 0, h, tab)
+        state = dict(state)
+        state["draft_tab"] = jnp.asarray(tab)
+        return state
+
     def _pad_prompt(self, tokens: np.ndarray) -> np.ndarray:
         b = self.prefill_bucket
         padded_len = max(b, -(-len(tokens) // b) * b)
@@ -400,7 +442,9 @@ class ServeEngine:
                 full = [np.concatenate([p, s], axis=0) for p, s in
                         zip(prefix_flat, self._kv_tree_to_flat(suf_kv))]
                 self.prefix_cache.insert(seq, full)
-                return logits, state, tp, len(seq)
+                return logits, self._attach_draft_tab(
+                    state, seq, getattr(req, "draft_hint", None)), tp, \
+                    len(seq)
 
         batch = {"tokens": jnp.asarray(padded[None])}
         if self.cfg.frontend is not None:
@@ -413,7 +457,8 @@ class ServeEngine:
             self.prefix_cache.insert(seq, self._kv_tree_to_flat(kv))
         else:
             logits, state = self._prefill(self.params, batch)
-        return logits, state, 0, len(seq)
+        return logits, self._attach_draft_tab(
+            state, seq, getattr(req, "draft_hint", None)), 0, len(seq)
 
     # -- prefix-cache payload <-> model pytree conversions --------------
     # Flat payload layout: [k, v] per layer, prelude first, then pattern

@@ -203,13 +203,17 @@ class EngineService:
             return bool(self._inbox or self._cancels)
 
     def emit_token(self, uid: int, index: int, token: int,
-                   t_rel: float) -> None:
+                   t_rel: float, interpolated: bool = False) -> None:
+        """``interpolated`` marks a timestamp the scheduler subdivided out
+        of one host-visible dispatch (sync-free windows, and the multiple
+        tokens a speculative verify step commits at once) rather than
+        measured per token — latency consumers can weight accordingly."""
         cb = self._subs.get(uid)
         if cb is None:
             return
         try:
             cb(EV_TOKEN, {"uid": uid, "index": index, "token": token,
-                          "t": t_rel})
+                          "t": t_rel, "interpolated": bool(interpolated)})
         except Exception:               # subscriber bugs never kill decode
             pass
 

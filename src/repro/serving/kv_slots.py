@@ -39,11 +39,16 @@ def _splice(dst, src, slot):
                      d, s)
         for d, s in zip(dst["pattern"], src["pattern"]))
     out["pos"] = paging.slot_write_leaf(dst["pos"], src["pos"], slot, axis=0)
+    # any extra top-level lane (e.g. the spec-decode draft_tab) batches on
+    # axis 0, like pos
+    for key in dst:
+        if key not in ("prelude", "pattern", "pos"):
+            out[key] = paging.slot_write_leaf(dst[key], src[key], slot, axis=0)
     return out
 
 
 def _extract(state, slot):
-    return {
+    out = {
         "prelude": tuple(
             jax.tree.map(lambda a: paging.slot_read_leaf(a, slot, axis=0), d)
             for d in state["prelude"]),
@@ -52,6 +57,10 @@ def _extract(state, slot):
             for d in state["pattern"]),
         "pos": paging.slot_read_leaf(state["pos"], slot, axis=0),
     }
+    for key in state:
+        if key not in ("prelude", "pattern", "pos"):
+            out[key] = paging.slot_read_leaf(state[key], slot, axis=0)
+    return out
 
 
 class SlotPool:

@@ -109,6 +109,20 @@ _COUNTER_ATTRS = {
                         "kv heads that triggered fine-grained correction"),
     "kv_head_steps": ("spec_kv_head_steps_total", float,
                       "kv-head decision opportunities (heads x steps)"),
+    # speculative decoding (models.serve_step_spec): one "verify step" is a
+    # drafted-block target pass; tokens it commits all share that step's
+    # compute, which is where the speedup comes from
+    "spec_verify_steps": ("specdec_verify_steps_total", int,
+                          "drafted-block verify iterations dispatched"),
+    "spec_slot_steps": ("specdec_slot_steps_total", int,
+                        "live slot participations in verify steps"),
+    "spec_proposed_tokens": ("specdec_proposed_tokens_total", float,
+                             "drafted tokens proposed to verification"),
+    "spec_accepted_tokens": ("specdec_accepted_tokens_total", float,
+                             "drafted tokens accepted by the target pass"),
+    "spec_committed_tokens": ("specdec_committed_tokens_total", float,
+                              "tokens committed by verify steps (base + "
+                              "accepted)"),
     "prefill_chunks": ("sched_prefill_chunks_total", int,
                        "chunked-prefill chunks executed"),
     "prefill_chunk_tokens": ("sched_prefill_chunk_tokens_total", int,
@@ -147,6 +161,7 @@ H_TOKEN_GAP = "request_token_gap_seconds"
 H_HIT_RATE = "spec_hit_rate"
 H_CORRECTION_RATE = "spec_correction_rate"
 H_CHURN = "spec_churn_pages"
+H_SPEC_TOKENS = "specdec_tokens_per_step"
 
 
 @dataclass
@@ -187,6 +202,11 @@ class EngineMetrics:
     # reference path (sample_on_device=False) syncs every step.
     sync_interval: int = 1
     sample_on_device: bool = True
+    # speculative decoding: drafted tokens per verify step (0 = off). When
+    # on, a "step" in the ITL sense commits up to 1 + draft_len tokens; the
+    # scheduler interpolates per-token timestamps inside a verify step and
+    # flags them in the frontend event payload.
+    draft_len: int = 0
     # engine-level SLO defaults (milliseconds; None = untagged). A request
     # whose RequestMetrics carries its own tag overrides these; requests
     # with NO effective tag are excluded from attainment/goodput.
@@ -232,6 +252,15 @@ class EngineMetrics:
             reg.histogram(H_CORRECTION_RATE, RATE_BUCKETS,
                           "per-step corrected-head fraction").observe(
                               corrected / kv_heads)
+
+    def observe_spec_step(self, tokens_per_step: float):
+        """One verify step's committed-tokens-per-live-slot (>= 1 while any
+        slot is live; the multi-token-step analogue of the per-step ITL
+        distributions — accepted counts per target step, from the same
+        sync-boundary block pull)."""
+        self.registry.histogram(H_SPEC_TOKENS, COUNT_BUCKETS,
+                                "tokens committed per verify step per "
+                                "slot").observe(tokens_per_step)
 
     def slo_check(self, rm: RequestMetrics):
         """Effective-SLO verdict for one finished request.
@@ -389,6 +418,32 @@ class EngineMetrics:
                 if self.kv_head_steps else 0.0)
 
     @property
+    def spec_accept_rate(self) -> float:
+        """Fraction of drafted tokens the target pass accepted."""
+        return (self.spec_accepted_tokens / self.spec_proposed_tokens
+                if self.spec_proposed_tokens else 0.0)
+
+    @property
+    def spec_tokens_per_target_step(self) -> float:
+        """Tokens committed per live slot per verify step (1.0 would be the
+        non-drafted path; the decode speedup upper bound is this ratio)."""
+        return (self.spec_committed_tokens / self.spec_slot_steps
+                if self.spec_slot_steps else 0.0)
+
+    def specdec_summary(self) -> dict:
+        return {
+            "draft_len": self.draft_len,
+            "verify_steps": self.spec_verify_steps,
+            "proposed_tokens": self.spec_proposed_tokens,
+            "accepted_tokens": self.spec_accepted_tokens,
+            "committed_tokens": self.spec_committed_tokens,
+            "accept_rate": self.spec_accept_rate,
+            "tokens_per_step": self.spec_tokens_per_target_step,
+            "tokens_per_step_hist": self._hist_summary(H_SPEC_TOKENS,
+                                                       COUNT_BUCKETS),
+        }
+
+    @property
     def slo_attainment(self) -> float:
         """Fraction of SLO-tagged completed requests meeting their SLOs
         (1.0 with no tagged traffic — nothing violated)."""
@@ -438,6 +493,7 @@ class EngineMetrics:
             "itl_s_mean": _mean([r.itl_s for r in done
                                  if r.itl_s is not None]),
             "slo": self.slo_summary(),
+            "specdec": self.specdec_summary(),
             "latency": {
                 "queue_wait_s": self._hist_summary(H_QUEUE_WAIT,
                                                    LATENCY_BUCKETS),

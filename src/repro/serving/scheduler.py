@@ -76,7 +76,8 @@ from repro.models.model import DECODE_STAT_KEYS as _STAT_KEYS
 from repro.obs import Observability
 from repro.obs.trace import (SPAN_DECODE_STEP, SPAN_DECODE_WINDOW,
                              SPAN_PREFILL_CHUNK, SPAN_SCHED_CANCEL,
-                             SPAN_SCHED_PREEMPT, SPAN_SCHED_RESUME)
+                             SPAN_SCHED_PREEMPT, SPAN_SCHED_RESUME,
+                             SPAN_SPEC_VERIFY)
 from repro.serving.metrics import EngineMetrics, RequestMetrics
 from repro.serving.sampling import request_key
 
@@ -241,6 +242,7 @@ class ContinuousScheduler:
                            sync_interval=(getattr(backend, "sync_interval", 1)
                                           if on_device else 1),
                            sample_on_device=on_device,
+                           draft_len=int(getattr(backend, "draft_len", 0)),
                            slo_ttft_ms=getattr(backend, "slo_ttft_ms", None),
                            slo_itl_ms=getattr(backend, "slo_itl_ms", None))
         svc = service
@@ -330,12 +332,15 @@ class ContinuousScheduler:
                 if svc is not None:
                     svc.emit_finish(uid, tr)
 
-        def apply_step(stats_np, toks_np, live_slots, dt, ts=None):
+        def apply_step(stats_np, toks_np, live_slots, dt, ts=None,
+                       interpolated=False):
             """Host bookkeeping for ONE decode step: telemetry, token
             append, finish detection. Shared by both dispatch modes.
             ``ts`` (run-relative seconds) anchors the step's trace spans;
             everything recorded here came out of the sync-boundary stat
-            pull — no extra host traffic."""
+            pull — no extra host traffic. ``interpolated`` marks per-token
+            timestamps subdivided out of one dispatch (window mode and
+            speculative verify rows) for downstream event consumers."""
             em.record_step(len(live_slots))
             for k in _PAGE_KEYS + ("corrected_heads", "kv_head_steps"):
                 src = {"corrected_heads": "corrected",
@@ -392,7 +397,7 @@ class ContinuousScheduler:
                     board.event("tokens", 1.0, abst(tok_t))
                 if svc is not None:
                     svc.emit_token(tr.req.uid, len(tr.tokens) - 1, tok,
-                                   tok_t)
+                                   tok_t, interpolated=interpolated)
                 if tr.finished():
                     del active[s]
                     finish(tr, s)
@@ -575,7 +580,8 @@ class ContinuousScheduler:
             if on_device:
                 self._window_steps(backend, pool, em, lanes, apply_step,
                                    stop_turnover=bool(queue)
-                                   or (svc is not None and svc.pending))
+                                   or (svc is not None and svc.pending),
+                                   flight=flight)
             else:
                 self._sync_step(backend, pool, em, lanes, apply_step)
 
@@ -613,7 +619,7 @@ class ContinuousScheduler:
                                 if agg["kv_heads"] else 0.0)})
 
     def _window_steps(self, backend, pool, em, lanes, apply_step,
-                      stop_turnover: bool):
+                      stop_turnover: bool, flight=None):
         """Host-sync-free mode: dispatch up to sync_interval fused steps,
         then sync once — pull the token/valid/stat blocks, apply them."""
         loop = lanes.device_loop(stop_turnover, em)
@@ -637,10 +643,59 @@ class ContinuousScheduler:
         self._trace.complete(SPAN_DECODE_WINDOW, ts_rel, dt,
                              args={"steps": n, "bytes_to_host": pulled})
         per_dt = dt / max(n, 1)
+        if toks_np.ndim == 3:
+            # speculative blocks (n, S, B): iteration j committed, per slot,
+            # the rows r with valid[j, r, slot] — an accept-longest prefix,
+            # so row 0's live set is the iteration's live set. Each row is
+            # applied as one logical decode step (per-token bookkeeping is
+            # row-exact); timestamps subdivide the iteration's wall share.
+            dl = toks_np.shape[1] - 1
+            for j in range(n):
+                rows = []
+                for r in range(dl + 1):
+                    live = [s for s in np.nonzero(valid_np[j, r])[0]]
+                    if live:
+                        rows.append((r, live))
+                if not rows:
+                    continue
+                base = rows[0][1]
+                committed = sum(len(live) for _, live in rows)
+                em.spec_verify_steps += 1
+                em.spec_slot_steps += len(base)
+                em.spec_proposed_tokens += dl * len(base)
+                em.spec_accepted_tokens += committed - len(base)
+                em.spec_committed_tokens += committed
+                ts_j = ts_rel + j * per_dt
+                if self._obs.enabled:
+                    em.observe_spec_step(committed / len(base))
+                self._trace.complete(
+                    SPAN_SPEC_VERIFY, ts_j, per_dt,
+                    args={"live_slots": len(base),
+                          "proposed": dl * len(base),
+                          "accepted": committed - len(base),
+                          "committed": committed})
+                # rejected rows' recall traffic was streamed for a
+                # continuation that never commits: dropped in flight (the
+                # rollback recall re-stages from the last committed row)
+                if flight is not None and dl:
+                    rej = float(sum(
+                        stats_np[k][j, r, s]
+                        for k in ("async_pages", "sync_pages")
+                        for r in range(1, dl + 1)
+                        for s in base if not valid_np[j, r, s]))
+                    if rej:
+                        flight.drop(rej)
+                sub = per_dt / len(rows)
+                for i, (r, live) in enumerate(rows):
+                    apply_step({k: stats_np[k][j, r] for k in _STAT_KEYS},
+                               toks_np[j, r], live, sub, ts=ts_j + i * sub,
+                               interpolated=True)
+            return
         for j in range(n):
             live = [s for s in np.nonzero(valid_np[j])[0]]
             apply_step({k: stats_np[k][j] for k in _STAT_KEYS},
-                       toks_np[j], live, per_dt, ts=ts_rel + j * per_dt)
+                       toks_np[j], live, per_dt, ts=ts_rel + j * per_dt,
+                       interpolated=True)
 
     def _sync_step(self, backend, pool, em, lanes, apply_step):
         """Synchronous reference mode: one decode step, one host sync —

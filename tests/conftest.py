@@ -14,7 +14,7 @@ from repro.configs.base import FreeKVConfig
 # Modules kept whole on one shard: their session-scoped fixture (a multi-
 # device subprocess driver) would otherwise re-run once per shard.
 _ATOMIC_MODULES = ("test_centroid_index.py", "test_preemption.py",
-                   "test_sharded_serving.py")
+                   "test_sharded_serving.py", "test_spec_decode.py")
 
 
 def pytest_collection_modifyitems(config, items):

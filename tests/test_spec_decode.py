@@ -1,0 +1,350 @@
+"""Speculative decoding fused with speculative retrieval.
+
+The drafted-window decode loop (``models.model.decode_window_spec``) runs a
+per-slot on-device bigram drafter, verifies the drafted block in ONE batched
+target pass, commits the longest greedy-consistent prefix, and rolls the
+rejected suffix's paged KV back in place (ring snapshot/restore + one
+blocking recall that doubles as the next block's prefetch). Assertions:
+
+  * greedy outputs are BIT-IDENTICAL to the non-speculative synchronous
+    reference for draft_len={0, 2, 4} x recall_overlap={on, off} x
+    kv_quant={none, int8} on slot-turnover traffic, and across schedulers
+    on equal-length traffic (the static path pads mixed-length prompts, so
+    scheduler comparisons use equal lengths, as benchmarks/dispatch does);
+  * an eos accepted mid-draft truncates exactly as the per-step path;
+  * priority preemption composes: a rollback-then-swap round-trip (spec
+    verify rejects a suffix, the request is then swapped to host with its
+    drafter table aboard) reproduces the uninterrupted stream bitwise;
+  * telemetry invariants: accepted <= proposed, committed tokens equal the
+    scheduler's applied steps, zero host bytes between syncs, accept-rate /
+    tokens-per-target-step are consistent ratios;
+  * donation census parity with the non-spec window: state + loop carry
+    donated, live-buffer census flat across drafted windows;
+  * a ``Request.draft_hint`` (oracle reference stream) raises the accept
+    rate but CANNOT change outputs;
+  * unsupported configurations (static scheduler, host sampling) fall back
+    to draft_len=0 instead of diverging.
+
+tp=2 coverage runs in one subprocess with two forced XLA host devices (the
+driver at the bottom of this file; module pinned whole to one CI shard, see
+conftest._ATOMIC_MODULES).
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import FreeKVConfig
+from repro.models.model import init_params, supports_spec_decode
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.sampling import SamplerConfig, request_key
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm-360m-smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    fkv = FreeKVConfig(method="freekv", page_size=8, budget=48, n_sink=8,
+                       n_window=8, tau=0.8)
+    return cfg, fkv, params
+
+
+def _prompt(cfg, n, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab_size, n).astype(np.int32)
+
+
+def _turnover_reqs(cfg, n=5, equal_len=False):
+    """Mixed lengths over few slots -> slot reuse mid-run; ``equal_len``
+    pins one prompt length so the padding static scheduler is comparable."""
+    return [Request(uid=i,
+                    tokens=_prompt(cfg, 48 if equal_len else 48 + 8 * (i % 2),
+                                   seed=i),
+                    max_new_tokens=3 if i % 2 else 7) for i in range(n)]
+
+
+def _run(cfg, fkv, params, reqs, batch_size=2, scheduler="continuous"):
+    eng = ServeEngine(cfg, fkv, params, max_len=256, batch_size=batch_size,
+                      sampler=SamplerConfig(temperature=0.0),
+                      scheduler=scheduler, prefill_bucket=8)
+    outs = eng.generate(reqs)
+    return outs, eng.last_metrics
+
+
+def _spec(fkv, draft_len, **kw):
+    return dataclasses.replace(fkv, draft_len=draft_len,
+                               sample_on_device=True, sync_interval=8, **kw)
+
+
+def _tokens(outs):
+    return {o.uid: o.tokens for o in outs}
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: spec-on vs the non-speculative synchronous reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("overlap", [True, False], ids=["overlap", "sync"])
+@pytest.mark.parametrize("quant", ["none", "int8"])
+def test_spec_bit_identity(setup, overlap, quant):
+    cfg, fkv, params = setup
+    base = dataclasses.replace(fkv, recall_overlap=overlap, kv_quant=quant)
+    ref, _ = _run(cfg, dataclasses.replace(base, sample_on_device=False),
+                  params, _turnover_reqs(cfg))
+    for dl in (0, 2, 4):
+        outs, em = _run(cfg, _spec(base, dl), params, _turnover_reqs(cfg))
+        assert _tokens(outs) == _tokens(ref), \
+            f"draft_len={dl} diverged from the synchronous reference"
+        assert em.summary()["specdec"]["draft_len"] == dl
+
+
+def test_scheduler_dimension_equal_len(setup):
+    """Equal-length prompts: the continuous spec loop, the static chunked
+    fallback (spec forced off there) and the synchronous reference agree."""
+    cfg, fkv, params = setup
+    mk = lambda: _turnover_reqs(cfg, equal_len=True)  # noqa: E731
+    ref, _ = _run(cfg, dataclasses.replace(fkv, sample_on_device=False),
+                  params, mk())
+    spec, _ = _run(cfg, _spec(fkv, 4), params, mk())
+    static, em = _run(cfg, _spec(fkv, 4), params, mk(), scheduler="static")
+    assert _tokens(spec) == _tokens(ref)
+    assert _tokens(static) == _tokens(ref)
+    assert em.summary()["specdec"]["draft_len"] == 0   # fallback, not a bug
+
+
+def test_eos_accepted_mid_draft(setup):
+    """An eos landing inside an accepted drafted block truncates exactly
+    where the per-step path stops — later drafted rows never commit."""
+    cfg, fkv, params = setup
+    prompt = _prompt(cfg, 64, seed=5)
+    full, _ = _run(cfg, dataclasses.replace(fkv, sample_on_device=False),
+                   params, [Request(uid=0, tokens=prompt, max_new_tokens=8)],
+                   batch_size=1)
+    eos = full[0].tokens[2]
+    cut = full[0].tokens.index(eos) + 1
+    outs, _ = _run(cfg, _spec(fkv, 4), params,
+                   [Request(uid=0, tokens=prompt, max_new_tokens=8,
+                            eos_token=eos)], batch_size=1)
+    assert outs[0].tokens == full[0].tokens[:cut]
+    assert outs[0].tokens[-1] == eos
+
+
+# ---------------------------------------------------------------------------
+# rollback-then-preempt: swap round-trip with the drafter lane aboard
+# ---------------------------------------------------------------------------
+def test_rollback_then_preempt_roundtrip(setup):
+    """Priority preemption mid-run under spec decode: the victim's state —
+    including its draft table and post-rollback rings — swaps to host and
+    resumes bit-identically to the never-preempted non-spec run."""
+    cfg, fkv, params = setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (40, 64, 24)]
+    mk = lambda: [Request(uid=i, tokens=p, max_new_tokens=10,  # noqa: E731
+                          priority=(1 if i == 2 else 0))
+                  for i, p in enumerate(prompts)]
+    base, _ = _run(cfg, dataclasses.replace(fkv, sample_on_device=False),
+                   params, mk())
+    pre, em = _run(cfg, _spec(fkv, 3, preempt=True), params, mk())
+    assert _tokens(pre) == _tokens(base), \
+        "preemption under spec decode changed greedy outputs"
+    assert em.preemptions >= 1 and em.resumes == em.preemptions
+    assert em.swap_out_bytes == em.swap_in_bytes > 0
+    assert em.summary()["specdec"]["verify_steps"] > 0
+
+
+# ---------------------------------------------------------------------------
+# telemetry invariants
+# ---------------------------------------------------------------------------
+def test_spec_telemetry_invariants(setup):
+    from repro.obs import Observability, TraceRecorder
+    cfg, fkv, params = setup
+    eng = ServeEngine(cfg, _spec(fkv, 3), params, max_len=256, batch_size=2,
+                      sampler=SamplerConfig(temperature=0.0),
+                      prefill_bucket=8,
+                      obs=Observability(enabled=True,
+                                        trace=TraceRecorder(enabled=True)))
+    outs = eng.generate(_turnover_reqs(cfg))
+    em = eng.last_metrics
+    sd = em.summary()["specdec"]
+    assert sd["draft_len"] == 3
+    assert 0 <= sd["accepted_tokens"] <= sd["proposed_tokens"]
+    # conservation: the verify loop commits every token after each
+    # request's prefill-sampled first one, and proposes exactly draft_len
+    # per committed slot-step (accepted = committed - slot_steps)
+    assert sd["committed_tokens"] == sum(len(o.tokens) - 1 for o in outs)
+    slot_steps = sd["proposed_tokens"] / 3
+    assert sd["accepted_tokens"] == sd["committed_tokens"] - slot_steps
+    assert 0.0 <= sd["accept_rate"] <= 1.0
+    assert 1.0 <= sd["tokens_per_step"] <= 4.0
+    d = em.summary()["dispatch"]
+    assert d["nonsync_host_bytes"] == 0.0, \
+        "drafted windows must stay host-sync-free between syncs"
+    # the histogram saw every verify iteration that committed something,
+    # and each one opened an engine/spec_verify trace span
+    assert sd["tokens_per_step_hist"]["count"] == sd["verify_steps"]
+    from repro.obs.trace import SPAN_SPEC_VERIFY
+    spans = [e for e in eng.obs.trace.events
+             if e.get("name") == SPAN_SPEC_VERIFY]
+    assert len(spans) == sd["verify_steps"]
+    assert sum(s["args"]["committed"] for s in spans) \
+        == sd["committed_tokens"]
+
+
+# ---------------------------------------------------------------------------
+# donation census parity with the non-spec window
+# ---------------------------------------------------------------------------
+def _donation_supported():
+    f = jax.jit(lambda x: x + 1, donate_argnums=(0,))
+    x = jnp.zeros((8,))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        f(x)
+    return x.is_deleted()
+
+
+def test_spec_window_donates_state(setup):
+    """The drafted window donates state + loop carry exactly like the
+    non-spec loop: consumed buffers are deleted, census stays flat."""
+    cfg, fkv, params = setup
+    if not _donation_supported():
+        pytest.skip("backend does not implement buffer donation")
+    eng = ServeEngine(cfg, _spec(fkv, 2), params, max_len=256, batch_size=2,
+                      sampler=SamplerConfig(temperature=0.0))
+    assert eng.spec_decode and eng.draft_len == 2
+    pool = eng.make_slot_pool(2)
+    req = Request(uid=0, tokens=_prompt(cfg, 64), max_new_tokens=32)
+    logits1, s1, _, _ = eng.prefill_one(req)
+    assert "draft_tab" in s1            # drafter lane rides the decode state
+    pool.insert(s1, pool.alloc(0))
+    tok = int(np.asarray(eng.sample_slot(logits1, request_key(0, 0), 0))[0])
+    loop = {"cur": jnp.asarray(np.array([tok, 0], np.int32)),
+            "key": jnp.tile(jnp.asarray(request_key(0, 0))[None], (2, 1)),
+            "count": jnp.ones(2, jnp.int32),
+            "limit": jnp.asarray(np.array([32, 1], np.int32)),
+            "eos": jnp.full((2,), -1, jnp.int32),
+            "fin": jnp.asarray(np.array([False, True])),
+            "stop_turnover": jnp.asarray(False)}
+    old_leaves = jax.tree.leaves(pool.state)
+    pool.state, loop, toks, valid, *rest = eng.decode_window(pool.state, loop)
+    assert toks.ndim == 3 and toks.shape[1] == 3     # (k, 1 + draft_len, B)
+    assert all(leaf.is_deleted() for leaf in old_leaves)
+    del rest
+    baseline = len(jax.live_arrays())
+    deltas = []
+    for _ in range(3):
+        old_leaves = jax.tree.leaves(pool.state)
+        pool.state, loop, *rest = eng.decode_window(pool.state, loop)
+        assert all(leaf.is_deleted() for leaf in old_leaves)
+        del rest
+        deltas.append(len(jax.live_arrays()) - baseline)
+    assert max(deltas) - min(deltas) <= 2, deltas
+
+
+# ---------------------------------------------------------------------------
+# draft hints: steer acceptance, never outputs
+# ---------------------------------------------------------------------------
+def test_draft_hint_boosts_accept_not_outputs(setup):
+    cfg, fkv, params = setup
+    prompt = _prompt(cfg, 48, seed=11)
+    mk = lambda hint=None: [Request(uid=0, tokens=prompt,  # noqa: E731
+                                    max_new_tokens=32, draft_hint=hint)]
+    base, _ = _run(cfg, _spec(fkv, 0), params, mk(), batch_size=1)
+    cold, em_cold = _run(cfg, _spec(fkv, 4), params, mk(), batch_size=1)
+    hint = np.concatenate([prompt[-1:],
+                           np.asarray(base[0].tokens, np.int32)])
+    warm, em_warm = _run(cfg, _spec(fkv, 4), params, mk(hint), batch_size=1)
+    assert cold[0].tokens == base[0].tokens
+    assert warm[0].tokens == base[0].tokens, \
+        "a draft hint must never change greedy outputs"
+    cold_acc = em_cold.summary()["specdec"]["accept_rate"]
+    warm_acc = em_warm.summary()["specdec"]["accept_rate"]
+    assert warm_acc > cold_acc, (cold_acc, warm_acc)
+
+
+# ---------------------------------------------------------------------------
+# unsupported configurations fall back to draft_len=0
+# ---------------------------------------------------------------------------
+def test_unsupported_configs_fall_back(setup):
+    cfg, fkv, params = setup
+    assert supports_spec_decode(cfg, _spec(fkv, 4))
+    eng = ServeEngine(cfg, _spec(fkv, 4), params, max_len=128, batch_size=2,
+                      scheduler="static")
+    assert not eng.spec_decode and eng.draft_len == 0
+    host = dataclasses.replace(_spec(fkv, 4), sample_on_device=False)
+    eng = ServeEngine(cfg, host, params, max_len=128, batch_size=2)
+    assert not eng.spec_decode and eng.draft_len == 0
+    eng = ServeEngine(cfg, _spec(fkv, 4), params, max_len=128, batch_size=2)
+    assert eng.spec_decode and eng.draft_len == 4
+
+
+# ---------------------------------------------------------------------------
+# tp=2: one subprocess with two forced host devices
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="session")
+def tp_report(tmp_path_factory):
+    out = tmp_path_factory.mktemp("tp_specdec") / "report.json"
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    subprocess.run([sys.executable, os.path.abspath(__file__), str(out)],
+                   check=True, timeout=1500, env=env, cwd=REPO)
+    return json.loads(out.read_text())
+
+
+@pytest.mark.parametrize("cell", ["overlap=True/quant=none",
+                                  "overlap=False/quant=int8"])
+def test_tp2_spec_bit_identical(tp_report, cell):
+    r = tp_report[cell]
+    assert r["tp2_spec_tokens"] == r["tp1_ref_tokens"], \
+        "tp=2 spec decode diverged from the tp=1 synchronous reference"
+    assert r["specdec"]["draft_len"] == 3
+    assert r["specdec"]["verify_steps"] > 0
+    assert r["nonsync_host_bytes"] == 0.0
+
+
+def _driver(out_path):
+    assert len(jax.devices()) >= 2, jax.devices()
+    cfg = get_config("smollm-360m-smoke")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    report = {}
+    for overlap, quant in ((True, "none"), (False, "int8")):
+        fkv = FreeKVConfig(method="freekv", page_size=8, budget=48, n_sink=8,
+                           n_window=8, tau=0.8, recall_overlap=overlap,
+                           kv_quant=quant)
+
+        def gen(f, tp):
+            eng = ServeEngine(cfg, f, params, max_len=256, batch_size=2,
+                              sampler=SamplerConfig(temperature=0.0),
+                              prefill_bucket=8, tp=tp)
+            outs = eng.generate(_turnover_reqs(cfg))
+            return {o.uid: o.tokens for o in outs}, eng.last_metrics
+
+        ref, _ = gen(dataclasses.replace(fkv, sample_on_device=False), tp=1)
+        spec, em = gen(_spec(fkv, 3), tp=2)
+        s = em.summary()
+        report[f"overlap={overlap}/quant={quant}"] = {
+            "tp1_ref_tokens": {str(k): v for k, v in ref.items()},
+            "tp2_spec_tokens": {str(k): v for k, v in spec.items()},
+            "specdec": s["specdec"],
+            "nonsync_host_bytes": s["dispatch"]["nonsync_host_bytes"],
+        }
+    with open(out_path, "w") as f:
+        json.dump(report, f)
+
+
+if __name__ == "__main__":
+    _driver(sys.argv[1])

@@ -21,7 +21,7 @@ is gated absolutely: the new value may not exceed the tolerance itself.
 
     PYTHONPATH=src python tools/check_bench.py [--tolerance 0.25]
         [--sections breakdown ablation quant_quality dispatch sharded
-         serving preempt obs openloop longctx] [--list]
+         serving preempt obs openloop longctx specdec] [--list]
 
 Exit status 0 = no regressions; 1 = regression or missing/failed re-run.
 Sections without a committed baseline are skipped with a warning
@@ -51,6 +51,8 @@ COMMANDS = {
     "obs": [sys.executable, "benchmarks/obs_overhead.py", "--smoke"],
     "openloop": [sys.executable, "benchmarks/openloop_load.py", "--smoke"],
     "longctx": [sys.executable, "benchmarks/longctx_selection.py", "--smoke"],
+    "specdec": [sys.executable, "benchmarks/specdec_throughput.py",
+                "--smoke"],
 }
 
 # (path-into-metrics, direction); direction: "lower" | "higher" | "true"
@@ -180,6 +182,21 @@ GATES = {
             (("needle_acc_centroid_256k",), "higher"),
             (("extrapolated_1m", "scan_reduction"), "higher"),
             (("hidden_fraction",), "higher"),
+        ],
+    },
+    "specdec": {
+        "cmd": "specdec",
+        "metrics": [
+            # speculative decoding: every draft_len x overlap x quant x tp
+            # cell (and the hinted throughput run) must stay bit-identical
+            # to the non-speculative synchronous reference; the oracle-hint
+            # decode-attributed speedup must hold >= 1.5x; accept rate and
+            # tokens per target step are within-run ratios. Raw tok/s and
+            # wall_speedup are recorded, never gated (CI runners differ).
+            (("bit_identical",), "true"),
+            (("speedup_ge_1p5x",), "true"),
+            (("accept_rate",), "higher"),
+            (("tokens_per_step",), "higher"),
         ],
     },
     "sharded": {
